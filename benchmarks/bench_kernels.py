@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: Pallas (interpret) wrappers vs the jnp
+reference at dLLM-decode shapes. On this CPU container the interesting
+derived quantity is the analytic VMEM working set / FLOP count per tile,
+not wall-clock (interpret mode is a correctness harness, not a timer)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ref
+from repro.kernels.ops import block_attention, confidence_argmax
+
+SHAPES = [  # (B, Sq, Skv, H, Hkv, D) — steady-state decode / prefill tile
+    (1, 129, 4096, 8, 2, 128),
+    (4, 129, 32768 // 8, 8, 2, 128),
+    (1, 512, 4096, 8, 2, 128),
+]
+
+
+def _time(f, n=3):
+    jax.block_until_ready(f())  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f())
+    return (time.perf_counter() - t0) / n
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for (B, Sq, Skv, H, Hkv, D) in SHAPES:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, Skv, Hkv, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, Skv, Hkv, D), jnp.float32)
+        qp = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+        kp = jnp.broadcast_to(jnp.arange(Skv)[None], (B, Skv))
+        km = jnp.ones((B, Skv), bool)
+        t_ref = _time(lambda: jax.jit(ref.block_attention_ref,
+                                      static_argnames=("scale",))(
+            q, k, v, qp, kp, km, scale=0.088))
+        flops = 4 * B * H * Sq * Skv * D
+        tile_vmem = (128 * D + 2 * 128 * D + 128 * D) * 4
+        emit(f"bench_kernels/attn_B{B}_Sq{Sq}_Skv{Skv}", t_ref * 1e6,
+             f"flops={flops:.3g};tile_vmem_bytes={tile_vmem};ref_path=jnp")
+    for (N, V) in [(129, 50304), (129, 256000), (1024, 151936)]:
+        logits = jax.random.normal(key, (N, V), jnp.float32)
+        t_ref = _time(lambda: jax.jit(ref.confidence_argmax_ref)(logits))
+        emit(f"bench_kernels/conf_N{N}_V{V}", t_ref * 1e6,
+             f"bytes_read={N*V*4};fused_writes={N*8}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Shared benchmark harness: a trained tiny diffusion LM (cached on
+disk) + timing helpers. Every benchmark prints ``name,us_per_call,derived``
+CSV rows (benchmarks/run.py aggregates)."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.decoder import DecodeConfig, DiffusionDecoder
+from repro.data.synthetic import ArithmeticDataset, exact_match
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import get_config, init_params
+from repro.training import checkpoint
+from repro.training.train import TrainConfig, train
+
+CKPT = os.environ.get("REPRO_BENCH_CKPT", "results/bench_model")
+TRAIN_STEPS = int(os.environ.get("REPRO_BENCH_TRAIN_STEPS", "1200"))
+GEN_LEN = 32
+BLOCK = 8
+SEQ = 12 + GEN_LEN  # fixed-width prompt (12) + generation
+
+
+def bench_model(seed: int = 0):
+    """Train (or load) the benchmark model: tiny diffusion LM on
+    arithmetic, the stand-in for LLaDA/GSM8K (DESIGN.md §7)."""
+    cfg = get_config("tiny", block_size=BLOCK)
+    params0 = init_params(cfg, jax.random.PRNGKey(seed))
+    if os.path.exists(CKPT + ".npz"):
+        return cfg, checkpoint.restore(CKPT, params0)
+    params, _ = train(cfg, TrainConfig(
+        steps=TRAIN_STEPS, batch_size=48, seq_len=SEQ,
+        log_every=max(TRAIN_STEPS // 4, 1), checkpoint_path=CKPT),
+        verbose=True)
+    return cfg, params
+
+
+def eval_prompts(cfg, n: int = 32, shots: int = 0, seed: int = 10_000):
+    tok = ByteTokenizer(cfg.vocab_size)
+    ds = ArithmeticDataset(tok, seq_len=SEQ, shots=shots)
+    samples = ds.eval_set(n, seed=seed)
+    prompts = np.stack([tok.encode(s.prompt) for s in samples]).astype(np.int32)
+    return tok, samples, prompts
+
+
+def run_method(cfg, params, prompts, samples, tok, *, method,
+               gen_len=GEN_LEN, warmup=True, **dkw):
+    d = DecodeConfig(method=method, gen_len=gen_len, block_size=BLOCK, **dkw)
+    dec = DiffusionDecoder(cfg, params, d)
+    if warmup:  # compile outside the timed region
+        dec.generate(prompts[:1].copy())
+    r = dec.generate(prompts.copy())
+    acc = exact_match(tok, r.tokens, samples)
+    tps = r.tokens_generated / r.wall_time if r.wall_time else 0.0
+    return dict(method=method, acc=acc, nfe=r.nfe, tps=tps,
+                wall=r.wall_time, qtok=r.query_tokens_processed,
+                kvtok=r.kv_tokens_attended, result=r)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,21 @@
+"""Paper Figure 6 analogue: dynamic-threshold strength alpha sweep."""
+from __future__ import annotations
+
+from benchmarks.common import GEN_LEN, bench_model, emit, eval_prompts, \
+    run_method
+
+
+def main(n_eval: int = 24):
+    cfg, params = bench_model()
+    tok, samples, prompts = eval_prompts(cfg, n=n_eval)
+    for a in (0.0, 0.1, 0.3, 0.6, 0.9):
+        r = run_method(cfg, params, prompts, samples, tok,
+                       method="streaming", gen_len=GEN_LEN, window=16,
+                       alpha=a, early_exit=False)
+        emit(f"fig_alpha/a{a}",
+             1e6 * r["wall"] / max(r["result"].tokens_generated, 1),
+             f"acc={r['acc']:.3f};tps={r['tps']:.1f};nfe={r['nfe']}")
+
+
+if __name__ == "__main__":
+    main()

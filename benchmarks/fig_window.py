@@ -1,0 +1,22 @@
+"""Paper Figure 5 analogue: sliding window size sweep (accuracy and
+throughput vs w)."""
+from __future__ import annotations
+
+from benchmarks.common import GEN_LEN, bench_model, emit, eval_prompts, \
+    run_method
+
+
+def main(n_eval: int = 24):
+    cfg, params = bench_model()
+    tok, samples, prompts = eval_prompts(cfg, n=n_eval)
+    for w in (0, 4, 8, 16, 32, -1):
+        r = run_method(cfg, params, prompts, samples, tok,
+                       method="streaming", gen_len=GEN_LEN, window=w,
+                       early_exit=False)
+        emit(f"fig_window/w{w if w >= 0 else 'full'}",
+             1e6 * r["wall"] / max(r["result"].tokens_generated, 1),
+             f"acc={r['acc']:.3f};tps={r['tps']:.1f};qtok={r['qtok']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""§Roofline: render the per-(arch x shape) roofline table from the
+dry-run artifacts (results/roofline/*__unrolled.json preferred; falls
+back to results/dryrun). Emits one CSV row per combo with the three
+terms, the dominant bottleneck, and the useful-FLOPs ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_records(dirs=("results/roofline", "results/dryrun")):
+    recs = {}
+    for d in dirs:
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            r = json.load(open(path))
+            key = (r["arch"], r["shape"], r["mesh"], r.get("variant", ""))
+            # prefer unrolled (exact flops) records
+            if key not in recs or r.get("unrolled"):
+                recs[key] = r
+    return recs
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        emit("roofline/NO_RECORDS", 0.0, "run repro.launch.dryrun first")
+        return
+    for (arch, shape, mesh, variant), r in sorted(recs.items()):
+        t = r["roofline"]
+        total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        ratio = r.get("useful_flops_ratio")
+        uf = f"{ratio:.2f}" if ratio is not None else "na"
+        derived = (f"compute_s={t['compute_s']:.3e};"
+                   f"memory_s={t['memory_s']:.3e};"
+                   f"collective_s={t['collective_s']:.3e};"
+                   f"dominant={r['dominant_term']};useful_flops={uf}")
+        emit(f"roofline/{arch}/{shape}/{mesh}"
+             + (f"/{variant}" if variant and variant != "streaming" else ""),
+             total * 1e6, derived)
+
+
+if __name__ == "__main__":
+    main()

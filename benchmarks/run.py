@@ -1,0 +1,56 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table_methods,...]
+
+Prints ``name,us_per_call,derived`` CSV. The first run trains the small
+benchmark model (~1500 steps, cached under results/bench_model.npz).
+Set REPRO_BENCH_TRAIN_STEPS to shrink for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_kernels, fig_alpha, fig_window, paper_config,
+                        roofline, table_ablation, table_genlength,
+                        table_methods, table_prefill, table_trailing)
+
+SUITES = {
+    "table_methods": table_methods.main,      # paper Tables 1/2/8
+    "table_ablation": table_ablation.main,    # paper Table 3
+    "table_prefill": table_prefill.main,      # paper Table 4
+    "table_genlength": table_genlength.main,  # paper Tables 5/13
+    "table_trailing": table_trailing.main,    # paper Table 6
+    "fig_window": fig_window.main,            # paper Figure 5
+    "fig_alpha": fig_alpha.main,              # paper Figure 6
+    "paper_config": paper_config.main,        # LLaDA-8B analytic flops
+    "bench_kernels": bench_kernels.main,
+    "roofline": roofline.main,                # §Roofline from dry-run
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    picked = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in picked:
+        t0 = time.perf_counter()
+        try:
+            SUITES[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

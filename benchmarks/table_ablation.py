@@ -1,0 +1,29 @@
+"""Paper Table 3 analogue: module ablation — Suf. (suffix pruning),
+Dyn. (dynamic threshold), Exit. (early exit) enabled incrementally on
+top of the Fast-dLLM baseline."""
+from __future__ import annotations
+
+from benchmarks.common import bench_model, emit, eval_prompts, run_method
+
+ROWS = [
+    ("base(fast)", dict(method="fast", early_exit=False)),
+    ("+Suf", dict(method="streaming", alpha=0.0, early_exit=False)),
+    ("+Suf+Dyn", dict(method="streaming", alpha=0.3, early_exit=False)),
+    ("+Suf+Dyn+Exit", dict(method="streaming", alpha=0.3, early_exit=True)),
+]
+
+
+def main(n_eval: int = 32):
+    cfg, params = bench_model()
+    tok, samples, prompts = eval_prompts(cfg, n=n_eval)
+    for name, kw in ROWS:
+        r = run_method(cfg, params, prompts, samples, tok, window=16,
+                       tau0=0.9, gen_len=32, **kw)
+        emit(f"table_ablation/{name}",
+             1e6 * r["wall"] / max(r["result"].tokens_generated, 1),
+             f"acc={r['acc']:.3f};tps={r['tps']:.1f};nfe={r['nfe']};"
+             f"qtok={r['qtok']}")
+
+
+if __name__ == "__main__":
+    main()

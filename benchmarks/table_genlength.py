@@ -1,0 +1,48 @@
+"""Paper Table 5/13 analogue: speedup grows with generation length —
+the suffix-pruning advantage compounds as the suffix gets longer (the
+paper reaches 225x at 2048). We sweep 32/64/128/256 on the tiny model
+and report the NFE- and query-token-based speedup factors, plus the
+analytic attended-token ratio at the paper's exact config (gen 512,
+block 32, w=96) for the full-size backbones."""
+from __future__ import annotations
+
+from benchmarks.common import bench_model, emit, eval_prompts, run_method
+from repro.core.suffix import suffix_query_region
+
+
+def analytic_query_tokens(gen_len, block, window):
+    """Sum of per-block query lengths (one refresh + steps amortized
+    out): the structural compute ratio of Suf. pruning."""
+    full = pruned = 0
+    for c in range(gen_len // block):
+        r_full = suffix_query_region(gen_start=0, gen_len=gen_len,
+                                     block_size=block, block_idx=c, window=-1)
+        r_p = suffix_query_region(gen_start=0, gen_len=gen_len,
+                                  block_size=block, block_idx=c, window=window)
+        full += r_full.query_len
+        pruned += r_p.query_len
+    return full / pruned
+
+
+def main(n_eval: int = 24):
+    cfg, params = bench_model()
+    tok, samples, prompts = eval_prompts(cfg, n=n_eval)
+    for gen_len in (16, 32, 64, 128):
+        base = None
+        for m in ("fast", "streaming"):
+            r = run_method(cfg, params, prompts, samples, tok, method=m,
+                           gen_len=gen_len, window=16)
+            if base is None:
+                base = r["qtok"]
+            emit(f"table_genlength/gen{gen_len}/{m}",
+                 1e6 * r["wall"] / max(r["result"].tokens_generated, 1),
+                 f"acc={r['acc']:.3f};tps={r['tps']:.1f};nfe={r['nfe']};"
+                 f"qtok_reduction={base/max(r['qtok'],1):.2f}x")
+    # paper-config analytic ratios (gen 512/1024/2048, block 32, w=96)
+    for g in (512, 1024, 2048):
+        emit(f"table_genlength/analytic_gen{g}", 0.0,
+             f"suffix_compute_ratio={analytic_query_tokens(g, 32, 96):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

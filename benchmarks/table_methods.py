@@ -1,0 +1,34 @@
+"""Paper Tables 1/2/8 analogue: accuracy + throughput + speedup of all
+five methods (vanilla / dKV-Cache / Prefix-Cache / Fast-dLLM / ours) on
+the trained arithmetic model, at two generation lengths.
+
+Also reports NFE and query-token reductions — the hardware-independent
+speedup mechanisms (wall-clock on 1 CPU core understates the paper's
+GPU/TPU gains; NFE and attended-token ratios are the transferable part).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (bench_model, emit, eval_prompts, run_method)
+
+METHODS = ["vanilla", "dkv", "prefix", "fast", "streaming"]
+
+
+def main(n_eval: int = 32):
+    cfg, params = bench_model()
+    tok, samples, prompts = eval_prompts(cfg, n=n_eval)
+    for gen_len in (16, 32):
+        base_tps = None
+        for m in METHODS:
+            r = run_method(cfg, params, prompts, samples, tok, method=m,
+                           gen_len=gen_len, window=16, tau0=0.9, alpha=0.3)
+            if base_tps is None:
+                base_tps = r["tps"] or 1e-9
+            emit(f"table_methods/gen{gen_len}/{m}",
+                 1e6 * r["wall"] / max(r["result"].tokens_generated, 1),
+                 f"acc={r['acc']:.3f};tps={r['tps']:.1f};"
+                 f"speedup={r['tps']/base_tps:.2f}x;nfe={r['nfe']};"
+                 f"qtok={r['qtok']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Paper Table 4 analogue: effect of prefill (few-shot) length on
+throughput/speedup for Fast-dLLM vs streaming."""
+from __future__ import annotations
+
+from benchmarks.common import bench_model, emit, eval_prompts, run_method
+
+
+def main(n_eval: int = 24):
+    cfg, params = bench_model()
+    for shots in (0, 2, 4):
+        tok, samples, prompts = eval_prompts(cfg, n=n_eval, shots=shots)
+        base = None
+        for m in ("prefix", "fast", "streaming"):
+            r = run_method(cfg, params, prompts, samples, tok, method=m,
+                           gen_len=32, window=16)
+            if base is None:
+                base = r["tps"] or 1e-9
+            emit(f"table_prefill/shots{shots}/{m}",
+                 1e6 * r["wall"] / max(r["result"].tokens_generated, 1),
+                 f"acc={r['acc']:.3f};tps={r['tps']:.1f};"
+                 f"speedup={r['tps']/base:.2f}x;promptlen={prompts.shape[1]}")
+
+
+if __name__ == "__main__":
+    main()

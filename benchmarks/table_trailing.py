@@ -1,0 +1,20 @@
+"""Paper Table 6 analogue: trailing positional information ablation."""
+from __future__ import annotations
+
+from benchmarks.common import bench_model, emit, eval_prompts, run_method
+
+
+def main(n_eval: int = 32):
+    cfg, params = bench_model()
+    tok, samples, prompts = eval_prompts(cfg, n=n_eval)
+    for trailing in (False, True):
+        r = run_method(cfg, params, prompts, samples, tok,
+                       method="streaming", gen_len=32, window=8,
+                       trailing_position=trailing)
+        emit(f"table_trailing/{'with' if trailing else 'without'}",
+             1e6 * r["wall"] / max(r["result"].tokens_generated, 1),
+             f"acc={r['acc']:.3f};tps={r['tps']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Assigned architecture configs (+ paper backbones + tiny CPU variants).
+
+Each module registers the exact spec-sheet config under its public id
+and a ``<id>-smoke`` reduced variant (<=2 pattern periods, d_model<=512,
+<=4 experts) exercised by the per-arch CPU smoke tests. Full configs are
+only ever lowered via ShapeDtypeStructs in launch/dryrun.py.
+"""
+from repro.configs import (dream_llada, gemma2_27b, kimi_k2, llava_next_34b,
+                           minitron_4b, musicgen_medium, olmoe_1b_7b,
+                           phi4_mini, qwen3_32b, recurrentgemma_9b, tiny,
+                           xlstm_350m)
+
+ASSIGNED = [
+    "xlstm-350m", "musicgen-medium", "recurrentgemma-9b", "minitron-4b",
+    "llava-next-34b", "olmoe-1b-7b", "kimi-k2-1t-a32b", "gemma2-27b",
+    "phi4-mini-3.8b", "qwen3-32b",
+]

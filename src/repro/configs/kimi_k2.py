@@ -1,0 +1,28 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE (paper-table)
+[arXiv:2501.kimi2].
+
+61L d_model=7168 64H (GQA kv=8) expert d_ff=2048, MoE 384e top-8,
+vocab=163840. Per the assignment sheet all 61 layers are uniform MoE
+with GQA attention (the production model's MLA + first-dense-layer +
+shared expert are deviations noted in DESIGN.md §7). At mesh (16,16):
+24 local experts/shard (expert parallel over ``data``), expert hidden
+2048/16=128 over ``model``; params ~= 8 GB/chip bf16. train_4k keeps
+AdamW moments in bf16 to fit 16 GB HBM (optimizer.state_dtype).
+"""
+from repro.configs.common import smoke_variant
+from repro.models.config import MOE, LayerSpec, ModelConfig, register
+
+
+@register("kimi-k2-1t-a32b")
+def kimi_k2() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", arch_type="moe", n_layers=61, d_model=7168,
+        n_heads=64, n_kv_heads=8, d_ff=0, vocab_size=163_840,
+        head_dim=128, pattern=(LayerSpec("attn", MOE),),
+        n_experts=384, moe_top_k=8, moe_d_ff=2048,
+        rope_theta=50_000.0, remat=True)
+
+
+@register("kimi-k2-1t-a32b-smoke")
+def kimi_k2_smoke() -> ModelConfig:
+    return smoke_variant(kimi_k2(), n_layers=2, remat=False)

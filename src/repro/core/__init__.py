@@ -1,0 +1,13 @@
+from repro.core.decoder import (METHODS, DecodeConfig, DiffusionDecoder,
+                                GenerateResult)
+from repro.core.engine import Completion, Request, ServingEngine
+from repro.core.schedule import (confidence_and_tokens, dynamic_threshold,
+                                 fixed_rate_select, select_tokens)
+from repro.core.suffix import (QueryRegion, steady_state_query_len,
+                               suffix_query_region)
+
+__all__ = ["METHODS", "DecodeConfig", "DiffusionDecoder", "GenerateResult",
+           "Completion", "Request", "ServingEngine",
+           "confidence_and_tokens", "dynamic_threshold", "fixed_rate_select",
+           "select_tokens", "QueryRegion", "steady_state_query_len",
+           "suffix_query_region"]

@@ -1,0 +1,374 @@
+"""Block-wise diffusion decoding — Streaming-dLLM and all paper baselines.
+
+Five methods (paper Tables 1/2/8):
+
+  vanilla   — no cache; full-sequence forward each denoise step; fixed
+              schedule (top-`K/M` most-confident masked tokens per step).
+  dkv       — delayed KV cache (Ma et al. 2025): a token's K/V is frozen
+              into a position-indexed cache one step after it decodes;
+              masked tokens recompute theirs each step. Vanilla schedule.
+  prefix    — Fast-dLLM's prefix cache: prompt + finished blocks cached;
+              the block + FULL suffix recomputed each step. Vanilla
+              schedule.
+  fast      — Fast-dLLM: prefix cache + fixed-threshold tau0 parallel
+              commit (argmax fallback guarantees progress).
+  streaming — OURS: prefix cache + attenuation-guided suffix pruning
+              (window w + trailing position token) + dynamic threshold
+              tau(t) (Eq. 10) + EOS early exit.
+
+The per-step compute is a single jitted function; Python drives blocks /
+steps (vLLM-style host scheduler). Query shapes are exact per block, so
+the jit cache holds at most #distinct-shapes entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.suffix import suffix_query_region
+from repro.models.config import ModelConfig
+from repro.models.model import apply_model, init_cache
+
+METHODS = ("vanilla", "dkv", "prefix", "fast", "streaming")
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeConfig:
+    method: str = "streaming"
+    gen_len: int = 256
+    block_size: int = 32
+    steps_per_block: int = 0       # 0 -> block_size (one token per step)
+    tau0: float = 0.9              # base confidence threshold
+    alpha: float = 0.3             # Eq. 10 adaptation strength
+    window: int = 96               # suffix tokens kept (streaming); -1=full
+    trailing_position: bool = True
+    early_exit: bool = True
+    use_kernels: bool = False      # route attention/confidence to Pallas
+    # Beyond-paper (EXPERIMENTS.md §Perf HC1): freeze the pruned-suffix
+    # KV at the block-refresh step and reuse it across the block's
+    # denoise iterations (DualCache-inspired). Steps then query only the
+    # K block tokens instead of K + w + 1 — ~4x less step compute at the
+    # paper's config. The suffix KV is one refresh stale within a block
+    # (same approximation class as the prefix cache itself).
+    frozen_suffix: bool = False
+
+    def __post_init__(self):
+        assert self.method in METHODS, self.method
+        assert self.gen_len % self.block_size == 0
+
+    @property
+    def effective_window(self) -> int:
+        if self.method == "streaming":
+            return self.window
+        return -1                   # baselines see the full suffix
+
+    @property
+    def parallel(self) -> bool:
+        return self.method in ("fast", "streaming")
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray             # (B, gen_len) committed tokens
+    nfe: int                       # model forward evaluations
+    steps_per_block: list
+    wall_time: float
+    query_tokens_processed: int    # sum of query lengths over all NFEs
+    kv_tokens_attended: int        # sum of (kv length * query len) proxy
+    tokens_generated: int          # non-EOS tokens (paper's TPS metric)
+    early_exits: int
+    prefill_time: float = 0.0
+
+    @property
+    def tokens_per_nfe(self) -> float:
+        return self.tokens_generated / max(self.nfe, 1)
+
+
+class DiffusionDecoder:
+    """Host-driven block diffusion decoder over one compiled step fn."""
+
+    def __init__(self, cfg: ModelConfig, params, dcfg: DecodeConfig,
+                 mesh=None, data_axes=("data",)):
+        self.cfg = cfg
+        self.params = params
+        self.dcfg = dcfg
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self._fns: Dict[Any, Any] = {}
+
+    # ------------------------------------------------------ jitted steps
+
+    def _encode_fn(self):
+        if "encode" not in self._fns:
+            self._fns["encode"] = jax.jit(
+                lambda p, toks, pos: apply_model(
+                    self.cfg, p, tokens=toks, positions=pos).logits)
+        return self._fns["encode"]
+
+    def _prefill_fn(self):
+        if "prefill" not in self._fns:
+            def f(p, toks, pos, cache):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="encode", cache=cache)
+                return out.cache, out.kv_valid
+            self._fns["prefill"] = jax.jit(f)
+        return self._fns["prefill"]
+
+    def _refresh_fn(self):
+        """Block-start step (paper §3.3): one pass over
+        [prefix || current block || (pruned) suffix] that BOTH produces
+        the block logits and refreshes the prefix KV cache. Computing the
+        prefix KV in the presence of the masked region matches the
+        training distribution — a prompt-only prefill does not (it
+        measurably degrades small models; see tests/test_decoder.py)."""
+        if "refresh" not in self._fns:
+            def f(p, toks, pos, cache, *, upto):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="encode", cache=cache,
+                                  cache_upto=upto)
+                return out.logits, out.cache
+            self._fns["refresh"] = jax.jit(f, static_argnames=("upto",))
+        return self._fns["refresh"]
+
+    def _step_fn(self):
+        key = "step"
+        if key not in self._fns:
+            def f(p, toks, pos, cache, kv_valid):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="step", cache=cache, kv_valid=kv_valid,
+                                  mesh=self.mesh, data_axes=self.data_axes)
+                return out.logits
+            self._fns[key] = jax.jit(f)
+        return self._fns[key]
+
+    def _append_fn(self):
+        if "append" not in self._fns:
+            def f(p, toks, pos, cache, kv_valid):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="append", cache=cache,
+                                  kv_valid=kv_valid)
+                return out.cache, out.kv_valid
+            self._fns["append"] = jax.jit(f)
+        return self._fns["append"]
+
+    def _frozen_refresh_fn(self):
+        """HC1 (frozen suffix): block-start pass over [prefix || query]
+        that writes ALL KV position-indexed into a T-sized buffer —
+        including the pruned-suffix and trailing mask tokens — so steps
+        can attend to frozen suffix KV and query only the block."""
+        if "frozen_refresh" not in self._fns:
+            def f(p, toks, pos, cache, *, upto):
+                B = toks.shape[0]
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="append", cache=cache,
+                                  kv_valid=jnp.zeros((B,), jnp.int32),
+                                  append_at=pos,
+                                  cache_positions=None, cache_upto=upto)
+                return out.logits, out.cache
+            self._fns["frozen_refresh"] = jax.jit(f, static_argnames=("upto",))
+        return self._fns["frozen_refresh"]
+
+    def _dkv_step_fn(self):
+        if "dkv" not in self._fns:
+            def f(p, toks, pos, cache, valid_mask, mix):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="append", cache=cache,
+                                  kv_valid=valid_mask, append_at=pos,
+                                  self_kv_mix=mix)
+                return out.logits, out.cache
+            self._fns["dkv"] = jax.jit(f)
+        return self._fns["dkv"]
+
+    # ------------------------------------------------------ main loop
+
+    def generate(self, prompt: np.ndarray) -> GenerateResult:
+        cfg, d = self.cfg, self.dcfg
+        B, P = prompt.shape
+        L, K = d.gen_len, d.block_size
+        T = P + L
+        n_blocks = L // K
+        steps_cap = d.steps_per_block or K
+        mask_id, eos_id = cfg.mask_token_id, cfg.eos_token_id
+
+        x = np.full((B, T), mask_id, np.int32)
+        x[:, :P] = prompt
+        committed = np.zeros((B, T), bool)
+        committed[:, :P] = True
+        done = np.zeros((B,), bool)
+
+        nfe = 0
+        q_tokens = 0
+        kv_tokens = 0
+        steps_hist = []
+        early_exits = 0
+        t0 = time.perf_counter()
+
+        use_cache = d.method != "vanilla"
+        frozen = d.frozen_suffix and d.method in ("fast", "streaming")
+        cache = valid = valid_mask = cached_mask = None
+        prefill_time = 0.0
+        if use_cache:
+            cache = init_cache(cfg, B, T)
+            if d.method == "dkv":
+                # dKV prefill: one full-sequence pass (prompt + masks),
+                # position-indexed cache; only the prompt KV is valid.
+                tp0 = time.perf_counter()
+                pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+                cache, _ = self._prefill_fn()(self.params, jnp.asarray(x),
+                                              pos, cache)
+                jax.block_until_ready(jax.tree.leaves(cache)[0])
+                prefill_time = time.perf_counter() - tp0
+                nfe += 1
+                q_tokens += B * T
+                kv_tokens += B * T * T
+                valid_mask = np.zeros((B, T), bool)
+                valid_mask[:, :P] = True
+                cached_mask = valid_mask.copy()
+
+        for c in range(n_blocks):
+            if done.all():
+                break
+            region = suffix_query_region(
+                gen_start=P, gen_len=L, block_size=K, block_idx=c,
+                window=d.effective_window if d.trailing_position
+                else max(d.effective_window, 0))
+            qpos = region.positions                       # (Sq,)
+            if not d.trailing_position and region.trailing_pos >= 0:
+                qpos = qpos[:-1]
+            Sq = len(qpos)
+            qpos_b = np.broadcast_to(qpos[None], (B, Sq)).copy()
+            bstart, bend = region.block_start, region.block_start + K
+
+            prefix_len = bstart
+            step = 0
+            toks = None
+            while step < steps_cap:
+                blk_masked = ~committed[:, bstart:bend]
+                if not (blk_masked & ~done[:, None]).any():
+                    break
+                step += 1
+                nfe += 1
+
+                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
+                if d.method == "vanilla":
+                    q_tokens += B * T
+                    logits = self._encode_fn()(
+                        self.params, jnp.asarray(x),
+                        jnp.broadcast_to(jnp.arange(T)[None], (B, T)))
+                    blk_logits = logits[:, bstart:bend]
+                    kv_tokens += B * T * T
+                elif d.method == "dkv":
+                    q_tokens += B * Sq
+                    mix = jnp.asarray(
+                        cached_mask[np.arange(B)[:, None], qpos_b])
+                    logits, cache = self._dkv_step_fn()(
+                        self.params, q_toks, jnp.asarray(qpos_b), cache,
+                        jnp.asarray(valid_mask), mix)
+                    blk_logits = logits[:, :K]
+                    # tokens committed earlier (whose fresh KV this step
+                    # was decoded-input based) are now frozen
+                    newly_frozen = committed & ~cached_mask
+                    cached_mask |= newly_frozen
+                    valid_mask |= newly_frozen
+                    kv_tokens += B * Sq * (valid_mask.sum() // B + Sq)
+                elif step == 1:
+                    # block-start refresh (paper §3.3): prefix + query
+                    # region in one encode; caches the prefix KV (and,
+                    # with frozen_suffix, the suffix/trailing KV too)
+                    q_tokens += B * (prefix_len + Sq)
+                    full_pos = np.concatenate(
+                        [np.arange(prefix_len, dtype=np.int32), qpos])
+                    full_pos = np.broadcast_to(full_pos[None],
+                                               (B, prefix_len + Sq))
+                    full_toks = jnp.asarray(
+                        x[np.arange(B)[:, None], full_pos])
+                    if frozen:
+                        logits, cache = self._frozen_refresh_fn()(
+                            self.params, full_toks, jnp.asarray(full_pos),
+                            cache, upto=prefix_len)
+                        vb = np.zeros((B, T), bool)
+                        vb[:, :prefix_len] = True
+                        for pp in qpos[K:]:
+                            vb[:, pp] = True
+                        valid = jnp.asarray(vb)
+                    else:
+                        logits, cache = self._refresh_fn()(
+                            self.params, full_toks, jnp.asarray(full_pos),
+                            cache, upto=prefix_len)
+                        valid = jnp.full((B,), prefix_len, jnp.int32)
+                    blk_logits = logits[:, prefix_len:prefix_len + K]
+                    kv_tokens += B * (prefix_len + Sq) ** 2
+                elif frozen:
+                    q_tokens += B * K
+                    bpos = np.broadcast_to(
+                        np.arange(bstart, bend, dtype=np.int32)[None], (B, K))
+                    logits = self._step_fn()(
+                        self.params, jnp.asarray(x[:, bstart:bend]),
+                        jnp.asarray(bpos), cache, valid)
+                    blk_logits = logits[:, :K]
+                    kv_tokens += B * K * (prefix_len + Sq + K)
+                else:
+                    q_tokens += B * Sq
+                    logits = self._step_fn()(
+                        self.params, q_toks, jnp.asarray(qpos_b), cache,
+                        valid)
+                    blk_logits = logits[:, :K]
+                    kv_tokens += B * Sq * (prefix_len + Sq)
+
+                blk_np = np.array(blk_logits, np.float32)
+                blk_np[..., mask_id] = -1e30  # LLaDA: never emit [MASK]
+                conf, toks = sched.confidence_and_tokens(blk_np)
+                conf, toks = np.asarray(conf), np.asarray(toks)
+
+                if d.parallel:
+                    if d.method == "streaming":
+                        r_mask = blk_masked.mean(axis=1)
+                        tau = sched.dynamic_threshold(d.tau0, d.alpha, r_mask)
+                    else:
+                        tau = np.full((B,), d.tau0)
+                    commit = np.array(sched.select_tokens(
+                        jnp.asarray(conf), jnp.asarray(blk_masked),
+                        jnp.asarray(tau)))
+                else:
+                    n_commit = max(1, K // steps_cap)
+                    commit = np.array(sched.fixed_rate_select(
+                        jnp.asarray(conf), jnp.asarray(blk_masked), n_commit))
+                sel = np.where(commit)
+                x[sel[0], bstart + sel[1]] = toks[sel]
+                committed[:, bstart:bend] |= commit
+
+            steps_hist.append(step)
+
+            # finalize block: commit any stragglers (steps cap reached)
+            blk_masked = ~committed[:, bstart:bend]
+            if blk_masked.any() and toks is not None:
+                x[:, bstart:bend] = np.where(blk_masked, toks, x[:, bstart:bend])
+            committed[:, bstart:bend] = True
+            # Early exit (paper §3.3): a block that decoded an EOS makes
+            # all *subsequent* blocks skippable for that row.
+            if d.early_exit:
+                hit = (x[:, bstart:bend] == eos_id).any(axis=1) & ~done
+                if hit.any():
+                    early_exits += int(hit.sum())
+                    done |= hit
+
+        gen = x[:, P:].copy()
+        # truncate each row at first EOS (tokens after EOS don't count)
+        tokens_generated = 0
+        for b in range(B):
+            eos_pos = np.where(gen[b] == eos_id)[0]
+            n = eos_pos[0] if len(eos_pos) else L
+            tokens_generated += int(n)
+            if len(eos_pos):
+                gen[b, eos_pos[0]:] = eos_id
+        wall = time.perf_counter() - t0
+        return GenerateResult(gen, nfe, steps_hist, wall, q_tokens,
+                              kv_tokens, tokens_generated, early_exits,
+                              prefill_time)

@@ -1,0 +1,65 @@
+"""Temporal component of Streaming-dLLM: confidence scores, the dynamic
+threshold (Eq. 10), and the token selection rule S(.) (Eq. 9).
+
+All functions are jit-safe and operate on the *current block* region.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def confidence_and_tokens(logits: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 4: c_i = max softmax(z_i); x_hat_i = argmax softmax(z_i).
+
+    logits: (..., V) float32 -> (conf (...,), tokens (...,) int32).
+    Computed via logsumexp (never materializes the softmax) — mirrors the
+    fused Pallas kernel in kernels/confidence.py.
+    """
+    m = jnp.max(logits, axis=-1)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    conf = jnp.exp(m - lse)
+    toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return conf, toks
+
+
+def dynamic_threshold(tau0: float, alpha: float, r_mask: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 10: tau(t) = tau0 * (1 - alpha * (1 - r_mask)).
+
+    r_mask in [0, 1]: fraction of still-masked tokens in the current
+    block. Early (r_mask ~ 1) -> tau ~ tau0 (strict); late -> relaxed.
+    """
+    return tau0 * (1.0 - alpha * (1.0 - r_mask))
+
+
+def select_tokens(conf: jnp.ndarray, is_masked: jnp.ndarray,
+                  tau: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 9 selection rule. conf/is_masked: (B, K); tau: scalar or (B,).
+
+    Returns commit mask (B, K): masked positions with conf >= tau; if a
+    row has none, its single most-confident masked position (guarantees
+    progress). Rows with no masked positions commit nothing.
+    """
+    tau = jnp.broadcast_to(jnp.asarray(tau, conf.dtype), conf.shape[:1])
+    mconf = jnp.where(is_masked, conf, -jnp.inf)
+    above = is_masked & (conf >= tau[:, None])
+    any_above = jnp.any(above, axis=1)
+    any_masked = jnp.any(is_masked, axis=1)
+    best = jnp.argmax(mconf, axis=1)
+    fallback = jax.nn.one_hot(best, conf.shape[1], dtype=jnp.bool_)
+    fallback = fallback & any_masked[:, None] & ~any_above[:, None]
+    return above | fallback
+
+
+def fixed_rate_select(conf: jnp.ndarray, is_masked: jnp.ndarray,
+                      n_commit: int) -> jnp.ndarray:
+    """Vanilla baseline schedule: commit the n_commit most-confident
+    masked tokens per step (standard low-confidence remasking order)."""
+    mconf = jnp.where(is_masked, conf, -jnp.inf)
+    k = min(n_commit, conf.shape[1])
+    _, idx = jax.lax.top_k(mconf, k)
+    commit = jnp.zeros_like(is_masked).at[
+        jnp.arange(conf.shape[0])[:, None], idx].set(True)
+    return commit & is_masked

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (CPU validation container); on real TPU
+set REPRO_PALLAS_INTERPRET=0.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.block_attention import block_attention as _block_attention
+from repro.kernels.confidence import confidence_argmax as _confidence_argmax
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def block_attention(q, k, v, q_pos, kv_pos, kv_mask, *, scale=None,
+                    softcap: float = 0.0, window: int = 0, **kw):
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    kw.setdefault("interpret", INTERPRET)
+    return _block_attention(q, k, v, q_pos, kv_pos, kv_mask, scale=scale,
+                            softcap=softcap, window=window, **kw)
+
+
+def sliding_window_attention(q, k, v, q_pos, kv_pos, *, window: int,
+                             scale=None, softcap: float = 0.0, **kw):
+    """Local-attention specialization (gemma2 local layers, long_500k
+    dense variant): full KV validity, distance-window mask only."""
+    kv_mask = jnp.ones(kv_pos.shape, jnp.bool_)
+    return block_attention(q, k, v, q_pos, kv_pos, kv_mask, scale=scale,
+                           softcap=softcap, window=window, **kw)
+
+
+def confidence_argmax(logits, **kw):
+    """logits: (..., V) -> (conf (...,), idx (...,))."""
+    shape = logits.shape[:-1]
+    kw.setdefault("interpret", INTERPRET)
+    conf, idx = _confidence_argmax(logits.reshape(-1, logits.shape[-1]), **kw)
+    return conf.reshape(shape), idx.reshape(shape)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def block_attention_ref(q, k, v, q_pos, kv_pos, kv_mask, *, scale,
+                        softcap: float = 0.0, window: int = 0):
+    """Bidirectional GQA attention with arbitrary KV validity mask.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D); q_pos: (B, Sq) i32;
+    kv_pos: (B, Skv) i32; kv_mask: (B, Skv) bool.
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32) * scale
+    qg = qf.reshape(B, Sq, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    if softcap:
+        scores = softcap_ref(scores, softcap)
+    mask = jnp.broadcast_to(kv_mask[:, None, :], (B, Sq, k.shape[1]))
+    if window:
+        dist = jnp.abs(q_pos[:, :, None].astype(jnp.int32)
+                       - kv_pos[:, None, :].astype(jnp.int32))
+        mask = mask & (dist <= window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked query rows emit exactly zero (kernel semantics), not
+    # the uniform average that softmax(-inf row) would give
+    any_valid = jnp.any(mask, axis=-1)[:, None, None, :, None]
+    probs = jnp.where(any_valid, probs, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D)
+
+
+def softcap_ref(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+def confidence_argmax_ref(logits):
+    """logits: (N, V) f32 -> (conf (N,), idx (N,) i32).
+
+    conf = max softmax prob = exp(max - logsumexp)."""
+    m = jnp.max(logits, axis=-1)
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    conf = jnp.exp(m.astype(jnp.float32) - lse)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return conf, idx

@@ -1,0 +1,184 @@
+"""PartitionSpec construction for params / optimizer state / caches.
+
+Scheme (DESIGN.md §5):
+  * model axis — tensor parallel: attention heads (padded per
+    heads.plan_heads), d_ff, per-expert hidden, vocab.
+  * data axis — batch; in train mode additionally FSDP-shards the
+    non-expert weight matrices along d_model/d_ff; MoE experts shard
+    their expert axis here (expert parallelism) in every mode.
+  * pod axis — pure data parallelism.
+
+Every proposed spec is divisibility-guarded against the actual shape:
+axes that don't divide fall back to replication (e.g. xlstm's 4 mLSTM
+heads never shard over model=16 — its wide projections do instead).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import (ATTN, ATTN_LOCAL, MLSTM, MOE, NONE, RGLRU,
+                                 SLSTM, LayerSpec, ModelConfig)
+from repro.models.model import init_cache, init_params
+
+
+def _guard(spec: P, shape, mesh) -> P:
+    """Drop sharding on axes whose extent doesn't divide the dim."""
+    out = []
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            out.append(None)
+            continue
+        ns = names if isinstance(names, tuple) else (names,)
+        total = 1
+        for n in ns:
+            total *= mesh.shape[n]
+        out.append(names if dim % total == 0 else None)
+    return P(*out)
+
+
+class SpecBuilder:
+    def __init__(self, cfg: ModelConfig, mesh, mode: str = "serve"):
+        assert mode in ("serve", "train")
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model = "model" if "model" in mesh.axis_names else None
+        self.fsdp = "data" if (mode == "train" and "data" in mesh.axis_names) \
+            else None
+        self.ep = "data" if "data" in mesh.axis_names else None
+        self.dp: Tuple[str, ...] = tuple(a for a in mesh.axis_names
+                                         if a in ("pod", "data"))
+        self.mode = mode
+
+    # ---------------- per-layer param specs
+
+    def _attn(self) -> dict:
+        m, f = self.model, self.fsdp
+        d = {"wq": P(f, m, None), "wk": P(f, m, None), "wv": P(f, m, None),
+             "wo": P(m, None, f)}
+        if self.cfg.qk_norm:
+            d["q_norm"] = P(None)
+            d["k_norm"] = P(None)
+        return d
+
+    def _ffn(self, kind: str) -> dict:
+        m, f = self.model, self.fsdp
+        if kind == "swiglu":
+            return {"w_gate": P(f, m), "w_up": P(f, m), "w_down": P(m, f)}
+        return {"w_up": P(f, m), "w_down": P(m, f)}
+
+    def _moe(self) -> dict:
+        m, e = self.model, self.ep
+        if self.cfg.moe_2d_dispatch:  # §Perf HC3b: d over model, f full
+            return {"router": P(None, None),
+                    "w_gate": P(e, m, None), "w_up": P(e, m, None),
+                    "w_down": P(e, None, m)}
+        return {"router": P(None, None),
+                "w_gate": P(e, None, m), "w_up": P(e, None, m),
+                "w_down": P(e, m, None)}
+
+    def _mlstm(self) -> dict:
+        m, f = self.model, self.fsdp
+        return {"w_up": P(f, m), "w_z": P(f, m), "conv": P(None, m),
+                "wq": P(m, None, None), "wk": P(m, None, None),
+                "wv": P(m, None, None), "w_i": P(m, None), "w_f": P(m, None),
+                "gn": P(m), "w_down": P(m, f)}
+
+    def _slstm(self) -> dict:
+        m, f = self.model, self.fsdp
+        d = {"gn": P(None),
+             "w_ffn_up": P(f, m), "w_ffn_down": P(m, f)}
+        for g in "zifo":
+            d[f"w_{g}"] = P(f, m)
+            d[f"r_{g}"] = P(None, None, None)
+        return d
+
+    def _rglru(self) -> dict:
+        m, f = self.model, self.fsdp
+        return {"w_in": P(f, m), "w_gate": P(f, m), "w_out": P(m, f),
+                "conv": P(None, m), "w_a": P(None, m), "w_x": P(None, m),
+                "lam": P(m)}
+
+    def layer(self, spec: LayerSpec) -> dict:
+        mixer = {ATTN: self._attn, ATTN_LOCAL: self._attn,
+                 MLSTM: self._mlstm, SLSTM: self._slstm,
+                 RGLRU: self._rglru}[spec.mixer]()
+        d = {"norm1": P(None), "mixer": mixer}
+        if spec.ffn != NONE:
+            d["norm2"] = P(None)
+            d["ffn"] = self._moe() if spec.ffn == MOE else self._ffn(spec.ffn)
+        return d
+
+    # ---------------- whole-model specs
+
+    def params(self):
+        cfg = self.cfg
+        m, f = self.model, self.fsdp
+        specs = {"embed": P(m, f), "out_norm": P(None)}
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(f, m)
+        if cfg.frontend_embed_dim:
+            specs["frontend_proj"] = P(None, m)
+        stack = lambda p: P(*((None,) + tuple(p)))
+        specs["scan"] = tuple(
+            jax.tree.map(stack, self.layer(s),
+                         is_leaf=lambda x: isinstance(x, P))
+            for s in cfg.pattern)
+        specs["tail"] = tuple(self.layer(s)
+                              for s in cfg.layout[cfg.reps * len(cfg.pattern):])
+        shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        return jax.tree.map(lambda sh, sp: _guard(sp, sh.shape, self.mesh),
+                            shapes, specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def cache(self, batch: int, max_len: int, serve_long: bool = False,
+              ctx_parallel: bool = False):
+        """Specs matching init_cache's structure (incl. scan stacking)."""
+        cfg = self.cfg
+        m = self.model
+        dp = self.dp
+        b = (dp if len(dp) > 1 else dp[0]) if (dp and not ctx_parallel) else None
+        seq = "data" if ctx_parallel else None
+
+        def one(spec: LayerSpec):
+            if spec.mixer in (ATTN, ATTN_LOCAL):
+                s = P(b, seq, m, None)
+                return (s, s)
+            if spec.mixer == MLSTM:
+                from repro.models.recurrent import MLSTMState
+                return MLSTMState(P(b, None, None, m), P(b, None, None),
+                                  P(b, None), P(b, None, m))
+            if spec.mixer == SLSTM:
+                from repro.models.recurrent import SLSTMState
+                return SLSTMState(P(b, m), P(b, m), P(b, m), P(b, m))
+            if spec.mixer == RGLRU:
+                from repro.models.recurrent import RGLRUState
+                return RGLRUState(P(b, m), P(b, None, m))
+            raise ValueError(spec.mixer)
+
+        layout = cfg.effective_layout(serve_long)
+        pattern = layout[:len(cfg.pattern)]
+        tail = layout[cfg.reps * len(cfg.pattern):]
+        stack = lambda p: P(*((None,) + tuple(p)))
+        scan = tuple(jax.tree.map(stack, one(s),
+                                  is_leaf=lambda x: isinstance(x, P))
+                     for s in pattern)
+        specs = {"scan": scan, "tail": tuple(one(s) for s in tail)}
+        shapes = jax.eval_shape(
+            lambda: init_cache(cfg, batch, max_len, serve_long))
+        return jax.tree.map(lambda sh, sp: _guard(sp, sh.shape, self.mesh),
+                            shapes, specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def batch_spec(self, extra_dims: int = 1) -> P:
+        dp = self.dp
+        b = dp if len(dp) > 1 else (dp[0] if dp else None)
+        return P(b, *([None] * extra_dims))
+
+    def opt(self, param_specs):
+        from repro.training.optimizer import AdamWState
+        return AdamWState(P(), jax.tree.map(lambda s: s, param_specs),
+                          jax.tree.map(lambda s: s, param_specs))

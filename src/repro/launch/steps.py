@@ -1,0 +1,235 @@
+"""Production step functions + ShapeDtypeStruct input specs.
+
+One builder per input-shape class:
+  train_4k    -> train_step   (masked-diffusion loss + AdamW update)
+  prefill_32k -> prefill_step (build KV caches / recurrent states)
+  decode_32k  -> serve_step   (ONE denoise iteration of the current
+                               block against the full cache; streaming
+                               variant uses the pruned query region,
+                               baseline variant the full suffix)
+  long_500k   -> serve_step   (batch 1, context-parallel cache, local
+                               attention for dense archs)
+
+``input_specs(cfg, shape)`` returns (ShapeDtypeStructs, in_shardings,
+out_shardings) — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.schedule import confidence_and_tokens
+from repro.launch.mesh import data_axes_of
+from repro.launch.sharding import SpecBuilder
+from repro.models.config import ModelConfig
+from repro.models.model import apply_model, init_cache, init_params
+from repro.training.loss import diffusion_loss
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode", long=True),
+}
+
+# paper defaults: block 32, window 96, gen length 512 (Table 12)
+BLOCK = 32
+WINDOW = 96
+GEN_LEN = 512
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+class LoweringSpec(NamedTuple):
+    fn: Any                 # python callable to jit
+    args: Tuple             # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    # trillion-param MoE: bf16 moments to fit 16G HBM (DESIGN.md §7)
+    bf16 = cfg.param_count() > 200e9
+    return AdamWConfig(state_dtype="bfloat16" if bf16 else "float32")
+
+
+# --------------------------------------------------------------- train
+
+def build_train(cfg: ModelConfig, mesh, shape=SHAPES["train_4k"]) -> LoweringSpec:
+    da = data_axes_of(mesh)
+    opt_cfg = opt_config_for(cfg)
+
+    def train_step(params, opt_state, tokens, loss_mask, prefix_embeds, rng):
+        def loss_fn(p):
+            return diffusion_loss(cfg, p, tokens, loss_mask, rng,
+                                  mesh=mesh, data_axes=da)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt_state2, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return params2, opt_state2, dict(metrics, loss=loss, **om)
+
+    def train_step_frontend(params, opt_state, tokens, loss_mask,
+                            prefix_embeds, rng):
+        # modality archs: loss over the token region, conditioned on the
+        # (stub) frontend prefix embeddings
+        def loss_fn(p):
+            return _dl_frontend(cfg, p, tokens, loss_mask, prefix_embeds,
+                                rng, mesh, da)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt_state2, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return params2, opt_state2, dict(metrics, loss=loss, **om)
+
+    B, S = shape["batch"], shape["seq"]
+    sb = SpecBuilder(cfg, mesh, mode="train")
+    pspec = sb.params()
+    ospec = sb.opt(pspec)
+    bspec = sb.batch_spec(1)
+    params_sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    opt_sds = jax.eval_shape(lambda: adamw_init(opt_cfg, params_sds))
+    rng_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    Pf = cfg.frontend_prefix_len if cfg.frontend_embed_dim else 0
+    S_tok = S - Pf
+    tokens_sds = _sds((B, S_tok), jnp.int32)
+    mask_sds = _sds((B, S_tok), jnp.bool_)
+    fn = train_step if not Pf else train_step_frontend
+    args = [params_sds, opt_sds, tokens_sds, mask_sds]
+    insh = [_ns(mesh, pspec), _ns(mesh, ospec), _ns(mesh, bspec),
+            _ns(mesh, bspec)]
+    if Pf:
+        args.append(_sds((B, Pf, cfg.frontend_embed_dim), jnp.bfloat16))
+        insh.append(_ns(mesh, sb.batch_spec(2)))
+    else:
+        args.append(_sds((B, 0, max(cfg.frontend_embed_dim, 1)), jnp.bfloat16))
+        insh.append(_ns(mesh, sb.batch_spec(2)))
+    args.append(rng_sds)
+    insh.append(None)
+    outsh = (_ns(mesh, pspec), _ns(mesh, ospec), None)
+    return LoweringSpec(fn, tuple(args), tuple(insh), outsh,
+                        dict(kind="train", batch=B, seq=S))
+
+
+def _dl_frontend(cfg, params, tokens, loss_mask, prefix_embeds, rng, mesh, da):
+    """diffusion loss with a frozen (stub) frontend prefix."""
+    B, S = tokens.shape
+    k_t, k_mask = jax.random.split(rng)
+    t = jax.random.uniform(k_t, (B, 1), minval=0.05, maxval=1.0)
+    mask = (jax.random.uniform(k_mask, (B, S)) < t) & loss_mask
+    x = jnp.where(mask, cfg.mask_token_id, tokens)
+    out = apply_model(cfg, params, tokens=x, prefix_embeds=prefix_embeds,
+                      mode="encode", mesh=mesh, data_axes=da, skip_head=True)
+    hidden = out.logits[:, prefix_embeds.shape[1]:]
+    from repro.training.loss import chunked_ce
+    w = mask.astype(jnp.float32) / t
+    nll, correct = chunked_ce(cfg, params, hidden, tokens, w)
+    ce = nll / jnp.maximum(w.sum(), 1e-6)
+    loss = ce + 0.01 * out.aux_loss
+    return loss, {"ce": ce, "aux": out.aux_loss,
+                  "masked_acc": correct / jnp.maximum(w.sum(), 1e-6),
+                  "n_masked": mask.sum()}
+
+
+# --------------------------------------------------------------- prefill
+
+def build_prefill(cfg: ModelConfig, mesh, shape=SHAPES["prefill_32k"],
+                  serve_long=False) -> LoweringSpec:
+    da = data_axes_of(mesh)
+    B, S = shape["batch"], shape["seq"]
+    max_len = S + GEN_LEN
+    ctx_par = bool(shape.get("long")) and B == 1
+    moe_da = () if ctx_par else da
+
+    def prefill_step(params, tokens, prefix_embeds, cache):
+        out = apply_model(cfg, params, tokens=tokens,
+                          prefix_embeds=prefix_embeds if
+                          cfg.frontend_embed_dim else None,
+                          mode="encode", cache=cache, serve_long=serve_long,
+                          mesh=mesh, data_axes=moe_da)
+        return out.cache, out.kv_valid
+
+    sb = SpecBuilder(cfg, mesh, mode="serve")
+    pspec = sb.params()
+    cspec = sb.cache(B, max_len, serve_long, ctx_parallel=ctx_par)
+    params_sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    cache_sds = jax.eval_shape(lambda: init_cache(cfg, B, max_len, serve_long))
+    Pf = cfg.frontend_prefix_len if cfg.frontend_embed_dim else 0
+    tokens_sds = _sds((B, S - Pf), jnp.int32)
+    emb_sds = _sds((B, Pf, max(cfg.frontend_embed_dim, 1)), jnp.bfloat16)
+    bspec = sb.batch_spec(1) if not ctx_par else P(None, "data")
+    args = (params_sds, tokens_sds, emb_sds, cache_sds)
+    insh = (_ns(mesh, pspec), _ns(mesh, bspec),
+            _ns(mesh, sb.batch_spec(2) if not ctx_par else P(None, None, None)),
+            _ns(mesh, cspec))
+    outsh = (_ns(mesh, cspec), _ns(mesh, sb.batch_spec(0) if not ctx_par
+                                   else P(None)))
+    return LoweringSpec(prefill_step, args, insh, outsh,
+                        dict(kind="prefill", batch=B, seq=S))
+
+
+# --------------------------------------------------------------- decode
+
+def build_serve(cfg: ModelConfig, mesh, shape, variant="streaming") -> LoweringSpec:
+    da = data_axes_of(mesh)
+    B, S = shape["batch"], shape["seq"]
+    serve_long = bool(shape.get("long"))
+    ctx_par = serve_long and B == 1
+    moe_da = () if ctx_par or B < mesh.shape.get("data", 1) else da
+    K = cfg.block_size
+    if variant == "streaming":
+        Sq = K + WINDOW + 1
+    elif variant == "frozen":
+        # HC1 (EXPERIMENTS.md §Perf): frozen-suffix steps query only the
+        # block; suffix/trailing KV are read from the cache (bool mask)
+        Sq = K
+    else:  # paper baseline: full suffix of a gen-512 target (block 0)
+        Sq = GEN_LEN
+
+    def serve_step(params, q_tokens, q_pos, cache, kv_valid):
+        out = apply_model(cfg, params, tokens=q_tokens, positions=q_pos,
+                          mode="step", cache=cache, kv_valid=kv_valid,
+                          serve_long=serve_long, mesh=mesh, data_axes=moe_da)
+        conf, toks = confidence_and_tokens(out.logits[:, :K])
+        return conf, toks
+
+    sb = SpecBuilder(cfg, mesh, mode="serve")
+    pspec = sb.params()
+    cspec = sb.cache(B, S, serve_long, ctx_parallel=ctx_par)
+    params_sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    cache_sds = jax.eval_shape(lambda: init_cache(cfg, B, S, serve_long))
+    bspec = sb.batch_spec(1) if not ctx_par else P(None, None)
+    b0 = sb.batch_spec(0) if not ctx_par else P(None)
+    kv_valid_sds = _sds((B, S), jnp.bool_) if variant == "frozen" \
+        else _sds((B,), jnp.int32)
+    kv_valid_spec = (sb.batch_spec(1) if not ctx_par else P(None, "data")) \
+        if variant == "frozen" else b0
+    args = (params_sds, _sds((B, Sq), jnp.int32), _sds((B, Sq), jnp.int32),
+            cache_sds, kv_valid_sds)
+    insh = (_ns(mesh, pspec), _ns(mesh, bspec), _ns(mesh, bspec),
+            _ns(mesh, cspec), _ns(mesh, kv_valid_spec))
+    outsh = (_ns(mesh, bspec), _ns(mesh, bspec))
+    return LoweringSpec(serve_step, args, insh, outsh,
+                        dict(kind="decode", batch=B, seq=S, q_len=Sq,
+                             variant=variant, long=serve_long))
+
+
+def build(cfg: ModelConfig, mesh, shape_name: str,
+          variant: str = "streaming") -> LoweringSpec:
+    shape = SHAPES[shape_name]
+    if shape["kind"] == "train":
+        return build_train(cfg, mesh, shape)
+    if shape["kind"] == "prefill":
+        return build_prefill(cfg, mesh, shape)
+    return build_serve(cfg, mesh, shape, variant=variant)

@@ -1,0 +1,41 @@
+"""Training launcher.
+
+CPU-scale real training (tiny archs / smoke variants):
+    PYTHONPATH=src python -m repro.launch.train --arch tiny --steps 300
+
+Production-shape lowering check (any assigned arch; ShapeDtypeStructs
+only — see dryrun.py for the full matrix):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --lower-only
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--lower-only", action="store_true")
+    args = ap.parse_args()
+
+    if args.lower_only:
+        from repro.launch.dryrun import run_one
+        run_one(args.arch, "train_4k", False)
+        return
+
+    from repro.models import get_config
+    from repro.training.train import TrainConfig, train
+    cfg = get_config(args.arch)
+    params, hist = train(cfg, TrainConfig(
+        steps=args.steps, batch_size=args.batch, seq_len=args.seq_len,
+        checkpoint_path=args.ckpt or None))
+    print(f"done: loss {hist[-1]['loss']:.4f} "
+          f"masked_acc {hist[-1]['masked_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.models.config import (ModelConfig, LayerSpec, get_config,
+                                 list_configs, register)
+from repro.models.model import (ModelOutput, apply_model, init_cache,
+                                init_params)
+
+__all__ = ["ModelConfig", "LayerSpec", "get_config", "list_configs",
+           "register", "ModelOutput", "apply_model", "init_cache",
+           "init_params"]

@@ -1,0 +1,251 @@
+"""Recurrent mixers: xLSTM (mLSTM/sLSTM) and RecurrentGemma's RG-LRU.
+
+All are causal scans — under block-wise diffusion they operate in the
+block-causal regime (paper §4.4): the distant masked suffix is never
+materialized, so the spatial component of Streaming-dLLM is implicit in
+the topology, while the temporal component (dynamic confidence decoding)
+still applies.
+
+Each mixer exposes
+    init_<name>(key, cfg, dtype) -> params
+    apply_<name>(cfg, p, x, state=None, return_state=False)
+with x: (B, S, d). ``state`` enables chunked/streaming processing (the
+decode path: resume from the prefix state, process the current block).
+
+Scans use jax.lax.scan over time. The RG-LRU additionally has an
+associative-scan fast path (h_t = a_t h_{t-1} + b_t is linear) used when
+``cfg.remat`` is False — one of the TPU-side perf levers recorded in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, rms_norm
+
+
+# ------------------------------------------------------------- helpers
+
+def _conv1d_init(key, width, channels, dtype):
+    scale = 1.0 / math.sqrt(width)
+    return (jax.random.normal(key, (width, channels), jnp.float32) * scale).astype(dtype)
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,C), w: (W,C), state: (B,W-1,C)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return out, new_state
+
+
+# ------------------------------------------------------------- RG-LRU
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray          # (B, w)
+    conv: jnp.ndarray       # (B, W-1, w)
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so a ~ U(0.9, 0.999)^c-ish (Griffin appendix)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.4, 0.9)
+    return {
+        "w_in": _dense_init(ks[1], (d, w), d, dtype),
+        "w_gate": _dense_init(ks[2], (d, w), d, dtype),
+        "w_out": _dense_init(ks[3], (w, d), w, dtype),
+        "conv": _conv1d_init(ks[4], cfg.rglru_conv_width, w, dtype),
+        "w_a": _dense_init(ks[5], (w, w), w, dtype),
+        "w_x": _dense_init(ks[6], (w, w), w, dtype),
+        "lam": lam.astype(dtype),
+    }
+
+
+def _rglru_scan(a, b, h0, use_assoc=True):
+    """h_t = a_t * h_{t-1} + b_t, time axis 1. a,b: (B,S,w)."""
+    if use_assoc:
+        # fold h0 into b_0
+        b = b.at[:, 0].add(a[:, 0] * h0)
+        aa, bb = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]),
+            (a, b), axis=1)
+        return bb, bb[:, -1]
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    hT, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), hT
+
+
+def apply_rglru(cfg, p, x, state: Optional[RGLRUState] = None,
+                return_state: bool = False):
+    B, S, d = x.shape
+    w = p["w_in"].shape[1]
+    if state is None:
+        state = RGLRUState(jnp.zeros((B, w), jnp.float32),
+                           jnp.zeros((B, cfg.rglru_conv_width - 1, w), x.dtype))
+    u = x @ p["w_in"]
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    u, conv_state = causal_conv1d(u, p["conv"], state.conv)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32))
+    c = 8.0
+    log_a = -c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r   # (B,S,w)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    hs, hT = _rglru_scan(a, b, state.h, use_assoc=not cfg.remat)
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    if return_state:
+        return y, RGLRUState(hT, conv_state)
+    return y
+
+
+# ------------------------------------------------------------- mLSTM
+
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray      # (B, H, dk, dv)
+    n: jnp.ndarray      # (B, H, dk)
+    m: jnp.ndarray      # (B, H)
+    conv: jnp.ndarray   # (B, W-1, 2d)
+
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    di = 2 * d                      # up-projection factor 2 (xLSTM block)
+    dk = di // H // 2               # qk dim per head
+    dv = di // H                    # value dim per head
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": _dense_init(ks[0], (d, di), d, dtype),
+        "w_z": _dense_init(ks[1], (d, di), d, dtype),
+        "conv": _conv1d_init(ks[2], 4, di, dtype),
+        "wq": _dense_init(ks[3], (di, H, dk), di, dtype),
+        "wk": _dense_init(ks[4], (di, H, dk), di, dtype),
+        "wv": _dense_init(ks[5], (di, H, dv), di, dtype),
+        "w_i": _dense_init(ks[6], (di, H), di, dtype),
+        "w_f": _dense_init(ks[7], (di, H), di, dtype),
+        "gn": jnp.zeros((di,), dtype),          # per-channel group-norm scale
+        "w_down": _dense_init(ks[8], (di, d), di, dtype),
+    }
+
+
+def apply_mlstm(cfg, p, x, state: Optional[MLSTMState] = None,
+                return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = p["w_up"].shape[1]
+    dk, dv = p["wq"].shape[2], p["wv"].shape[2]
+    if state is None:
+        state = MLSTMState(
+            jnp.zeros((B, H, dk, dv), jnp.float32),
+            jnp.zeros((B, H, dk), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32),
+            jnp.zeros((B, 3, di), x.dtype))
+    u = x @ p["w_up"]
+    z = x @ p["w_z"]
+    c, conv_state = causal_conv1d(u, p["conv"], state.conv)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bsd,dhk->bshk", c, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", c, p["wk"]).astype(jnp.float32) / math.sqrt(dk)
+    v = jnp.einsum("bsd,dhk->bshk", c, p["wv"]).astype(jnp.float32)
+    it = (c @ p["w_i"]).astype(jnp.float32)          # (B,S,H) log input gate
+    ft = (c @ p["w_f"]).astype(jnp.float32)          # (B,S,H) log forget gate pre-act
+
+    def step(carry, t):
+        C, n, m = carry
+        f_log = jax.nn.log_sigmoid(ft[:, t])         # (B,H)
+        m_new = jnp.maximum(f_log + m, it[:, t])
+        i_p = jnp.exp(it[:, t] - m_new)
+        f_p = jnp.exp(f_log + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            k[:, t, :, :, None] * v[:, t, :, None, :])
+        n = f_p[..., None] * n + i_p[..., None] * k[:, t]
+        num = jnp.einsum("bhkv,bhk->bhv", C, q[:, t])
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q[:, t]))
+        h = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m),
+                                 jnp.arange(S))
+    hs = hs.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)  # H*dv == di
+    hs = rms_norm(hs, p["gn"], cfg.norm_eps)                  # group-norm-ish
+    y = (hs + c) * jax.nn.silu(z)
+    y = y @ p["w_down"]
+    if return_state:
+        return y, MLSTMState(C, n, m, conv_state)
+    return y
+
+
+# ------------------------------------------------------------- sLSTM
+
+class SLSTMState(NamedTuple):
+    h: jnp.ndarray   # (B, d)
+    c: jnp.ndarray   # (B, d)
+    n: jnp.ndarray   # (B, d)
+    m: jnp.ndarray   # (B, d)
+
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 9)
+    p = {"gn": jnp.zeros((d,), dtype)}
+    for i, g in enumerate(["z", "i", "f", "o"]):
+        p[f"w_{g}"] = _dense_init(ks[i], (d, d), d, dtype)
+        # block-diagonal recurrent matrix, stored per head (H, hd, hd)
+        p[f"r_{g}"] = _dense_init(ks[4 + i], (H, hd, hd), hd, dtype)
+    p["w_ffn_up"] = _dense_init(ks[8], (d, int(d * 4 / 3)), d, dtype)
+    p["w_ffn_down"] = _dense_init(
+        jax.random.fold_in(ks[8], 1), (int(d * 4 / 3), d), int(d * 4 / 3), dtype)
+    return p
+
+
+def apply_slstm(cfg, p, x, state: Optional[SLSTMState] = None,
+                return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    if state is None:
+        z = jnp.zeros((B, d), jnp.float32)
+        state = SLSTMState(z, z, z, jnp.full((B, d), -1e30, jnp.float32))
+    pre = {g: (x @ p[f"w_{g}"]).astype(jnp.float32) for g in "zifo"}
+
+    def rmat(hprev, g):
+        hh = hprev.reshape(B, H, hd)
+        return jnp.einsum("bhk,hkj->bhj", hh,
+                          p[f"r_{g}"].astype(jnp.float32)).reshape(B, d)
+
+    def step(carry, t):
+        h, c, n, m = carry
+        zt = jnp.tanh(pre["z"][:, t] + rmat(h, "z"))
+        it = pre["i"][:, t] + rmat(h, "i")
+        ft = jax.nn.log_sigmoid(pre["f"][:, t] + rmat(h, "f"))
+        ot = jax.nn.sigmoid(pre["o"][:, t] + rmat(h, "o"))
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h = ot * (c / jnp.maximum(n, 1.0))
+        return (h, c, n, m_new), h
+
+    (h, c, n, m), hs = jax.lax.scan(step, tuple(state), jnp.arange(S))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)
+    hs = rms_norm(hs, p["gn"], cfg.norm_eps)
+    y = jax.nn.gelu(hs @ p["w_ffn_up"]) @ p["w_ffn_down"]
+    if return_state:
+        return y, SLSTMState(h, c, n, m)
+    return y

@@ -1,0 +1,82 @@
+"""Training loop: masked-diffusion LM on the synthetic corpus.
+
+Used by examples/train_and_serve.py to produce the small model that the
+serving benchmarks decode (giving real accuracy numbers for the methods
+table), and lowered at production shape by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import ArithmeticDataset
+from repro.data.tokenizer import ByteTokenizer
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.training import checkpoint
+from repro.training.loss import diffusion_loss
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 300
+    batch_size: int = 32
+    seq_len: int = 96
+    seed: int = 0
+    log_every: int = 25
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    checkpoint_path: Optional[str] = None
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh=None,
+                    data_axes=("data",)):
+    def train_step(params, opt_state, tokens, loss_mask, rng):
+        def loss_fn(p):
+            return diffusion_loss(cfg, p, tokens, loss_mask, rng,
+                                  mesh=mesh, data_axes=data_axes)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(opt_cfg, grads,
+                                                      opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig, params=None, verbose=True):
+    tok = ByteTokenizer(cfg.vocab_size)
+    ds = ArithmeticDataset(tok, seq_len=tcfg.seq_len, seed=tcfg.seed)
+    key = jax.random.PRNGKey(tcfg.seed)
+    if params is None:
+        params = init_params(cfg, key)
+    opt_cfg = dataclasses.replace(tcfg.opt, total_steps=tcfg.steps)
+    opt_state = adamw_init(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(tcfg.steps):
+        b = ds.batch(step, tcfg.batch_size)
+        key, sub = jax.random.split(key)
+        params, opt_state, m = step_fn(params, opt_state,
+                                       jnp.asarray(b.tokens),
+                                       jnp.asarray(b.loss_mask), sub)
+        if step % tcfg.log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(v) for k, v in m.items()}
+            m["step"] = step
+            history.append(m)
+            if verbose:
+                print(f"step {step:5d} loss {m['loss']:.4f} "
+                      f"masked_acc {m['masked_acc']:.3f} lr {m['lr']:.2e} "
+                      f"({time.perf_counter()-t0:.1f}s)")
+    if tcfg.checkpoint_path:
+        checkpoint.save(tcfg.checkpoint_path, params,
+                        {"steps": tcfg.steps, "config": cfg.name})
+    return params, history

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run subprocesses set
+# their own XLA_FLAGS; never set device-count flags globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+from hypothesis import settings  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+# jit compiles inside property bodies blow the default 200ms deadline
+settings.register_profile("repro", deadline=None, max_examples=30)
+settings.load_profile("repro")

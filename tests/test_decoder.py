@@ -1,0 +1,143 @@
+"""System-behaviour tests for the diffusion decoder (the paper's core)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decoder import METHODS, DecodeConfig, DiffusionDecoder
+from repro.models import get_config, init_params
+
+CFG = get_config("tiny")
+PARAMS = init_params(CFG, jax.random.PRNGKey(3))
+PROMPT = np.random.default_rng(0).integers(0, 200, (2, 10)).astype(np.int32)
+
+
+def _gen(method, **kw):
+    kw.setdefault("gen_len", 32)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("window", 8)
+    d = DecodeConfig(method=method, **kw)
+    return DiffusionDecoder(CFG, PARAMS, d).generate(PROMPT.copy())
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_all_methods_produce_tokens(method):
+    r = _gen(method)
+    assert r.tokens.shape == (2, 32)
+    assert (r.tokens >= 0).all() and (r.tokens < CFG.vocab_size).all()
+    assert r.nfe > 0
+
+
+def test_vanilla_is_deterministic():
+    a, b = _gen("vanilla"), _gen("vanilla")
+    assert (a.tokens == b.tokens).all()
+    assert a.nfe == b.nfe
+
+
+def test_streaming_full_window_matches_fast():
+    """With w covering the whole suffix and alpha=0 (static threshold),
+    streaming degenerates exactly to Fast-dLLM."""
+    s = _gen("streaming", window=10_000, alpha=0.0, early_exit=False)
+    f = _gen("fast", early_exit=False)
+    assert (s.tokens == f.tokens).all()
+    assert s.nfe == f.nfe
+
+
+def test_streaming_prunes_query_tokens():
+    s = _gen("streaming", gen_len=64, window=8, early_exit=False)
+    f = _gen("fast", gen_len=64, early_exit=False)
+    assert s.query_tokens_processed < f.query_tokens_processed
+
+
+def test_parallel_methods_use_fewer_steps():
+    v = _gen("vanilla")
+    s = _gen("streaming", tau0=0.5)
+    assert s.nfe <= v.nfe
+
+
+def test_fixed_schedule_step_counts():
+    r = _gen("prefix", early_exit=False)
+    # one-per-step baseline: every block takes exactly block_size steps
+    assert all(s == 8 for s in r.steps_per_block)
+
+
+def test_early_exit_skips_blocks():
+    """Force EOS by making the model... use a prompt of EOS tokens so the
+    trained-free random model still sometimes commits EOS; instead test
+    the mechanism directly: patch eos_token_id to the argmax'd token."""
+    r_no = _gen("streaming", early_exit=False, gen_len=64)
+    # pick the token the model actually generates most and pretend it is
+    # EOS — early exit must then cut blocks for those rows
+    vals, counts = np.unique(r_no.tokens, return_counts=True)
+    fake_eos = int(vals[counts.argmax()])
+    cfg2 = dataclasses.replace(CFG, eos_token_id=fake_eos)
+    d = DecodeConfig(method="streaming", gen_len=64, block_size=8, window=8)
+    r = DiffusionDecoder(cfg2, PARAMS, d).generate(PROMPT.copy())
+    assert r.early_exits > 0
+    assert len(r.steps_per_block) <= len(r_no.steps_per_block)
+
+
+def test_trailing_position_toggle_changes_query():
+    with_t = _gen("streaming", gen_len=64, trailing_position=True,
+                  early_exit=False)
+    without = _gen("streaming", gen_len=64, trailing_position=False,
+                   early_exit=False)
+    assert with_t.query_tokens_processed > without.query_tokens_processed
+
+
+def test_dynamic_threshold_commits_not_fewer_tokens_per_step():
+    """alpha > 0 relaxes tau as the block empties -> step count per block
+    can only shrink or stay equal vs alpha=0 at same tau0."""
+    a0 = _gen("streaming", alpha=0.0, tau0=0.8, early_exit=False)
+    a6 = _gen("streaming", alpha=0.6, tau0=0.8, early_exit=False)
+    assert sum(a6.steps_per_block) <= sum(a0.steps_per_block)
+
+
+def test_tokens_match_training_domain():
+    # committed tokens must never be the mask token
+    for m in METHODS:
+        r = _gen(m)
+        assert (r.tokens != CFG.mask_token_id).all()
+
+
+@pytest.mark.parametrize("name", ["xlstm-350m-smoke",
+                                  "recurrentgemma-9b-smoke",
+                                  "gemma2-27b-smoke", "olmoe-1b-7b-smoke",
+                                  "musicgen-medium-smoke"])
+def test_streaming_decode_every_family(name):
+    """The paper's decoder must run on every assigned arch family
+    (block-causal mode for SSM/hybrid — DESIGN.md §6)."""
+    cfg = get_config(name, block_size=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size - 4, (2, 10)).astype(np.int32)
+    d = DecodeConfig(method="streaming", gen_len=16, block_size=8, window=4,
+                     early_exit=False)
+    r = DiffusionDecoder(cfg, params, d).generate(prompts)
+    assert r.tokens.shape == (2, 16)
+    assert (r.tokens != cfg.mask_token_id).all()
+
+
+def test_frozen_suffix_decodes():
+    """HC1: frozen-suffix steps query only the block; generation still
+    valid and processes fewer query tokens than plain streaming."""
+    s = _gen("streaming", gen_len=64, window=8, early_exit=False)
+    f = _gen("streaming", gen_len=64, window=8, early_exit=False,
+             frozen_suffix=True)
+    assert f.tokens.shape == s.tokens.shape
+    assert (f.tokens != CFG.mask_token_id).all()
+    assert f.query_tokens_processed < s.query_tokens_processed
+
+
+def test_engine_serves_queue():
+    from repro.core.engine import ServingEngine
+    d = DecodeConfig(method="streaming", gen_len=16, block_size=8, window=8)
+    eng = ServingEngine(CFG, PARAMS, d, max_batch=4)
+    for i in range(6):
+        eng.submit(f"Q:{i}{i}+11=? A:", max_tokens=16)
+    done = eng.run_to_completion()
+    assert len(done) == 6
+    assert eng.stats["batches"] >= 2  # 6 requests / max_batch 4
+    assert all(isinstance(c.text, str) for c in done)

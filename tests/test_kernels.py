@@ -1,0 +1,93 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret
+mode executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import (block_attention, confidence_argmax,
+                               sliding_window_attention)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _mk(B, Sq, Skv, H, Hkv, D, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    qp = jnp.broadcast_to(jnp.arange(100, 100 + Sq)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv)[None], (B, Skv))
+    km = jax.random.uniform(ks[3], (B, Skv)) < 0.75
+    km = km.at[:, 0].set(True)  # at least one valid key
+    return q, k, v, qp, kp, km
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 8, 16, 2, 1, 16), (2, 33, 100, 4, 2, 32), (1, 129, 257, 8, 4, 64),
+    (2, 16, 512, 4, 4, 128), (1, 64, 64, 6, 2, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_attention_shapes(shape, dtype):
+    B, Sq, Skv, H, Hkv, D = shape
+    q, k, v, qp, kp, km = _mk(B, Sq, Skv, H, Hkv, D, dtype)
+    out = block_attention(q, k, v, qp, kp, km, tq=16, tk=32)
+    want = ref.block_attention_ref(q, k, v, qp, kp, km,
+                                   scale=1 / np.sqrt(D))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+@pytest.mark.parametrize("window", [0, 8, 64])
+def test_block_attention_features(softcap, window):
+    q, k, v, qp, kp, km = _mk(2, 40, 120, 4, 2, 32, jnp.float32)
+    out = block_attention(q, k, v, qp, kp, km, softcap=softcap,
+                          window=window, tq=16, tk=32)
+    want = ref.block_attention_ref(q, k, v, qp, kp, km, scale=1 / np.sqrt(32),
+                                   softcap=softcap, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_block_attention_fully_masked_rows_are_finite():
+    q, k, v, qp, kp, _ = _mk(1, 16, 32, 2, 1, 16, jnp.float32)
+    km = jnp.zeros((1, 32), bool)  # nothing valid
+    out = block_attention(q, k, v, qp, kp, km, tq=16, tk=16)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_sliding_window_matches_full_when_window_huge():
+    q, k, v, qp, kp, km = _mk(1, 24, 48, 4, 2, 32, jnp.float32)
+    full = block_attention(q, k, v, qp, kp, jnp.ones_like(km), tq=8, tk=16)
+    win = sliding_window_attention(q, k, v, qp, kp, window=10_000, tq=8, tk=16)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(win), atol=1e-6)
+
+
+@pytest.mark.parametrize("NV", [(5, 64), (37, 777), (128, 2048), (3, 50304)])
+def test_confidence_argmax(NV):
+    N, V = NV
+    logits = jax.random.normal(jax.random.PRNGKey(N), (N, V)) * 4
+    c, i = confidence_argmax(logits, ts=16, tv=256)
+    cr, ir = ref.confidence_argmax_ref(logits)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=1e-5)
+    assert (np.asarray(i) == np.asarray(ir)).all()
+
+
+def test_confidence_argmax_batched_shape():
+    logits = jax.random.normal(KEY, (2, 9, 333))
+    c, i = confidence_argmax(logits)
+    assert c.shape == (2, 9) and i.shape == (2, 9)
+    cr, ir = ref.confidence_argmax_ref(logits.reshape(-1, 333))
+    np.testing.assert_allclose(np.asarray(c).ravel(), np.asarray(cr), atol=1e-5)
+
+
+def test_confidence_matches_schedule_helper():
+    from repro.core.schedule import confidence_and_tokens
+    logits = jax.random.normal(KEY, (4, 11, 500)) * 3
+    c1, t1 = confidence_and_tokens(logits)
+    c2, t2 = confidence_argmax(logits)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    assert (np.asarray(t1) == np.asarray(t2)).all()

@@ -1,0 +1,126 @@
+"""Per-arch smoke tests: reduced variant of each assigned family runs
+one forward AND one train step on CPU; output shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED
+from repro.models import apply_model, get_config, init_cache, init_params
+from repro.models.heads import plan_heads
+from repro.training.loss import diffusion_loss
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+SMOKE = [a + "-smoke" for a in ASSIGNED] + ["llada-8b-smoke", "tiny",
+                                            "tiny-moe"]
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_forward_smoke(name):
+    cfg = get_config(name)
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size - 4)
+    kwargs = {}
+    if cfg.frontend_embed_dim:
+        kwargs["prefix_embeds"] = jax.random.normal(
+            KEY, (2, cfg.frontend_prefix_len, cfg.frontend_embed_dim))
+    out = apply_model(cfg, params, tokens=toks, **kwargs)
+    S = 32 + (cfg.frontend_prefix_len if cfg.frontend_embed_dim else 0)
+    assert out.logits.shape == (2, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(out.logits).all())
+
+
+@pytest.mark.parametrize("name", SMOKE)
+def test_train_step_smoke(name):
+    cfg = get_config(name)
+    params = init_params(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 24), 0, cfg.vocab_size - 4)
+    mask = jnp.ones((2, 24), bool)
+
+    def loss_fn(p):
+        return diffusion_loss(cfg, p, toks, mask, jax.random.PRNGKey(1))
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    ocfg = AdamWConfig()
+    st = adamw_init(ocfg, params)
+    p2, st2, m = adamw_update(ocfg, grads, st, params)
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params)))
+    assert delta > 0 and np.isfinite(delta)
+
+
+@pytest.mark.parametrize("name", ["tiny", "recurrentgemma-9b-smoke",
+                                  "xlstm-350m-smoke", "gemma2-27b-smoke"])
+def test_cached_step_consistency(name):
+    """Block-refresh + step must equal a single full encode for the
+    query-region logits (the cache path is exact given identical
+    visibility)."""
+    cfg = get_config(name)
+    params = init_params(cfg, KEY)
+    B, P, Q = 2, 12, 6
+    toks = jax.random.randint(KEY, (B, P + Q), 0, cfg.vocab_size - 4)
+    full = apply_model(cfg, params, tokens=toks)
+    # refresh: encode full with cache, then re-run the query region via
+    # step mode against the cached prefix — identical visibility
+    cache = init_cache(cfg, B, P + Q)
+    enc = apply_model(cfg, params, tokens=toks, mode="encode", cache=cache,
+                      cache_upto=P)
+    qpos = jnp.broadcast_to(jnp.arange(P, P + Q)[None], (B, Q))
+    step = apply_model(cfg, params, tokens=toks[:, P:], positions=qpos,
+                       mode="step", cache=enc.cache,
+                       kv_valid=jnp.full((B,), P, jnp.int32))
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        # pure-attention archs: step == encode exactly (same visibility)
+        np.testing.assert_allclose(np.asarray(step.logits),
+                                   np.asarray(full.logits[:, P:]),
+                                   atol=2e-3, rtol=2e-3)
+    else:
+        # recurrent mixers: step re-scans the suffix from the prefix
+        # state; prefix-state scan differs from full-seq scan only in
+        # what the PREFIX saw (nothing) — causal => identical
+        np.testing.assert_allclose(np.asarray(step.logits),
+                                   np.asarray(full.logits[:, P:]),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_head_padding_semantics():
+    """Zero-padded q heads and duplicated kv heads preserve outputs."""
+    base = get_config("tiny")
+    toks = jax.random.randint(KEY, (2, 16), 0, base.vocab_size - 4)
+    p1 = init_params(base, KEY)
+    out1 = apply_model(base, p1, tokens=toks)
+    import dataclasses
+    padded = dataclasses.replace(base, tp=16)  # forces 8q/4kv -> 16/16
+    plan = plan_heads(padded.n_heads, padded.n_kv_heads, padded.tp)
+    assert plan.pad_q % 16 == 0 and plan.pad_kv % 16 == 0
+    p2 = init_params(padded, KEY)
+    out2 = apply_model(padded, p2, tokens=toks)
+    assert bool(jnp.isfinite(out2.logits).all())
+    assert out2.logits.shape == out1.logits.shape
+
+
+@pytest.mark.parametrize("nq,nkv,tp", [
+    (24, 8, 16), (56, 8, 16), (24, 24, 16), (16, 1, 16), (64, 8, 16),
+    (32, 16, 16), (16, 16, 16), (4, 4, 16), (28, 4, 16), (64, 8, 8),
+])
+def test_plan_heads_divisibility(nq, nkv, tp):
+    plan = plan_heads(nq, nkv, tp)
+    assert plan.pad_q % tp == 0
+    assert plan.pad_kv % tp == 0 or tp % plan.pad_kv == 0
+    assert plan.pad_q % plan.pad_kv == 0
+    assert plan.pad_q >= nq and plan.pad_kv >= nkv
+    # group mapping consistent: q j -> kv j // group covers all kv
+    assert plan.group * plan.pad_kv == plan.pad_q
+
+
+def test_long_serve_layout_switch():
+    cfg = get_config("qwen3-32b-smoke")
+    lay = cfg.effective_layout(serve_long=True)
+    assert all(s.mixer == "attn_local" for s in lay)
+    lay2 = cfg.effective_layout(serve_long=False)
+    assert all(s.mixer == "attn" for s in lay2)

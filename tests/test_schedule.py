@@ -1,0 +1,78 @@
+"""Property tests (hypothesis) for the temporal component: Eq. 9/10."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.schedule import (confidence_and_tokens, dynamic_threshold,
+                                 fixed_rate_select, select_tokens)
+
+
+@given(st.floats(0.5, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_threshold_bounds(tau0, alpha, r_mask):
+    tau = float(dynamic_threshold(tau0, alpha, jnp.asarray(r_mask)))
+    assert tau0 * (1 - alpha) - 1e-6 <= tau <= tau0 + 1e-6
+
+
+@given(st.floats(0.5, 1.0), st.floats(0.0, 1.0),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_threshold_monotone_in_rmask(tau0, alpha, r1, r2):
+    """More masked tokens -> stricter threshold (paper's design intent)."""
+    lo, hi = sorted([r1, r2])
+    t_lo = float(dynamic_threshold(tau0, alpha, jnp.asarray(lo)))
+    t_hi = float(dynamic_threshold(tau0, alpha, jnp.asarray(hi)))
+    assert t_lo <= t_hi + 1e-6
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(1, 4), st.integers(1, 16), st.data())
+def test_select_always_progresses(B, K, data):
+    """Eq. 9: any row with >=1 masked token commits >=1 token."""
+    conf = np.array(data.draw(st.lists(
+        st.lists(st.floats(0, 1), min_size=K, max_size=K),
+        min_size=B, max_size=B)), np.float32)
+    masked = np.array(data.draw(st.lists(
+        st.lists(st.booleans(), min_size=K, max_size=K),
+        min_size=B, max_size=B)))
+    tau = data.draw(st.floats(0.1, 1.0))
+    commit = np.asarray(select_tokens(jnp.asarray(conf), jnp.asarray(masked),
+                                      jnp.asarray(tau)))
+    for b in range(B):
+        assert not (commit[b] & ~masked[b]).any()      # only masked commit
+        if masked[b].any():
+            assert commit[b].any()                      # progress guarantee
+        else:
+            assert not commit[b].any()
+
+
+def test_select_threshold_semantics():
+    conf = jnp.asarray([[0.95, 0.5, 0.92, 0.1]])
+    masked = jnp.asarray([[True, True, True, False]])
+    commit = np.asarray(select_tokens(conf, masked, jnp.asarray(0.9)))
+    assert commit.tolist() == [[True, False, True, False]]
+
+
+def test_select_fallback_argmax():
+    conf = jnp.asarray([[0.3, 0.6, 0.5, 0.99]])
+    masked = jnp.asarray([[True, True, True, False]])  # 0.99 not masked
+    commit = np.asarray(select_tokens(conf, masked, jnp.asarray(0.9)))
+    assert commit.tolist() == [[False, True, False, False]]
+
+
+@given(st.integers(1, 8))
+def test_fixed_rate_commits_exactly_n(n):
+    conf = jnp.asarray(np.random.default_rng(0).uniform(size=(2, 16)),
+                       jnp.float32)
+    masked = jnp.ones((2, 16), bool)
+    commit = np.asarray(fixed_rate_select(conf, masked, n))
+    assert (commit.sum(1) == min(n, 16)).all()
+
+
+def test_confidence_is_max_softmax():
+    logits = jnp.asarray(np.random.default_rng(1).normal(size=(3, 7, 50)),
+                         jnp.float32)
+    conf, toks = confidence_and_tokens(logits)
+    probs = np.array(jnp.exp(logits - jnp.max(logits, -1, keepdims=True)))
+    probs /= probs.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(conf), probs.max(-1), atol=1e-6)
+    assert (np.asarray(toks) == probs.argmax(-1)).all()

@@ -1,0 +1,53 @@
+"""Property tests for attenuation-guided suffix pruning (Eq. 7)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.suffix import steady_state_query_len, suffix_query_region
+
+
+@settings(deadline=None, max_examples=200)
+@given(st.integers(1, 64), st.integers(1, 16), st.integers(1, 8),
+       st.integers(0, 512), st.data())
+def test_region_invariants(K, n_blocks, _r, gen_start, data):
+    L = K * n_blocks
+    c = data.draw(st.integers(0, n_blocks - 1))
+    w = data.draw(st.one_of(st.just(-1), st.integers(0, L)))
+    r = suffix_query_region(gen_start=gen_start, gen_len=L, block_size=K,
+                            block_idx=c, window=w)
+    pos = r.positions
+    # block positions come first and are exactly the block
+    assert (pos[:K] == np.arange(r.block_start, r.block_start + K)).all()
+    # all positions inside the generation region, unique, sorted
+    assert pos.min() >= gen_start and pos.max() < gen_start + L
+    assert len(set(pos.tolist())) == len(pos)
+    assert (np.diff(pos) > 0).all()
+    # suffix window is contiguous after the block
+    if r.suffix_len:
+        assert pos[K] == r.block_start + K
+    # trailing position present iff window doesn't reach the end
+    remaining = gen_start + L - (r.block_start + K)
+    if w >= 0 and w < remaining:
+        assert r.trailing_pos == gen_start + L - 1
+        assert pos[-1] == gen_start + L - 1
+    else:
+        assert r.trailing_pos == -1
+
+
+def test_full_window_covers_everything():
+    r = suffix_query_region(gen_start=10, gen_len=64, block_size=16,
+                            block_idx=1, window=-1)
+    assert r.query_len == 64 - 16  # current block + all remaining suffix
+    assert r.trailing_pos == -1
+
+
+def test_steady_state_len():
+    assert steady_state_query_len(32, 96) == 129
+    assert steady_state_query_len(32, -1) == 33
+
+
+def test_last_block_has_no_suffix():
+    r = suffix_query_region(gen_start=0, gen_len=64, block_size=16,
+                            block_idx=3, window=8)
+    assert r.suffix_len == 0 and r.trailing_pos == -1
+    assert r.query_len == 16
