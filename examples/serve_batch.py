@@ -1,5 +1,7 @@
-"""Batched serving demo: a request queue served by the Streaming-dLLM
-engine, compared against the Fast-dLLM configuration of the same engine.
+"""Batched serving demo: one request queue served two ways — the legacy
+synchronous engine (largest shape group decoded to completion) vs the
+continuous block-level batcher (early-exit backfill, KV pool, streaming)
+— for both the Fast-dLLM and Streaming-dLLM configurations.
 
     PYTHONPATH=src python examples/serve_batch.py [--n 48]
 """
@@ -30,18 +32,27 @@ def main():
     tok = ByteTokenizer(cfg.vocab_size)
     ds = ArithmeticDataset(tok, seq_len=44)
     samples = ds.eval_set(args.n)
+    # ragged generation budgets: early-exit-heavy rows free their slots
+    budgets = [16 if i % 3 else 32 for i in range(args.n)]
 
     for method in ("fast", "streaming"):
         d = DecodeConfig(method=method, gen_len=32, block_size=8, window=8)
-        eng = ServingEngine(cfg, params, d, max_batch=16)
-        for s in samples:
-            eng.submit(s.prompt, max_tokens=32)
-        done = eng.run_to_completion()
-        hits = sum(int(c.text.strip() == s.answer)
-                   for c, s in zip(sorted(done, key=lambda c: c.uid), samples))
-        print(f"{method:<10} {len(done)} requests in "
-              f"{eng.stats['batches']:.0f} batches, "
-              f"{eng.throughput:.1f} tok/s, acc {hits/len(done):.2f}")
+        for mode in ("batch", "continuous"):
+            eng = ServingEngine(cfg, params, d, max_batch=16, mode=mode)
+            for s, mt in zip(samples, budgets):
+                eng.submit(s.prompt, max_tokens=mt)
+            done = eng.run_to_completion()
+            hits = sum(int(c.text.strip() == s.answer)
+                       for c, s in zip(sorted(done, key=lambda c: c.uid),
+                                       samples))
+            extra = ""
+            if mode == "continuous":
+                snap = eng._continuous.metrics.snapshot()
+                extra = (f", p50 {snap['latency_p50_s']*1e3:.0f}ms, "
+                         f"occ {snap['mean_occupancy']:.2f}")
+            print(f"{method:<10} {mode:<11} {len(done)} requests, "
+                  f"{eng.throughput:.1f} tok/s, acc {hits/len(done):.2f}"
+                  f"{extra}")
 
 
 if __name__ == "__main__":

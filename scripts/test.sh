@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Tier-1 test entrypoint + serving smoke.
+#
+#   scripts/test.sh              # full pytest suite (tier-1 command)
+#   scripts/test.sh smoke        # fast serving smoke: both engine modes
+#   scripts/test.sh all          # suite + smoke
+#
+# Tests run on the single real CPU device; the dry-run subprocesses set
+# their own XLA device-count flags (never export device-count flags
+# globally here — see tests/conftest.py).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+run_suite() {
+    python -m pytest -x -q "$@"
+}
+
+run_smoke() {
+    # tiny end-to-end serve in both modes; --train-steps kept small so
+    # the smoke stays fast (accuracy is not asserted here)
+    for mode in continuous batch; do
+        echo "== smoke: repro.launch.serve --mode $mode =="
+        python -m repro.launch.serve --arch tiny --n 8 --mode "$mode" \
+            --train-steps 120 --max-slots 4
+    done
+}
+
+case "${1:-suite}" in
+    smoke) run_smoke ;;
+    all)   run_suite; run_smoke ;;
+    suite) run_suite ;;
+    *)     run_suite "$@" ;;
+esac

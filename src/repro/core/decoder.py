@@ -34,9 +34,16 @@ import numpy as np
 from repro.core import schedule as sched
 from repro.core.suffix import suffix_query_region
 from repro.models.config import ModelConfig
-from repro.models.model import apply_model, init_cache
+from repro.models.model import apply_model, cache_take_rows, init_cache
 
 METHODS = ("vanilla", "dkv", "prefix", "fast", "streaming")
+
+
+def round_up_blocks(max_tokens: int, block_size: int) -> int:
+    """Generation-length bucket for a request: next block multiple.
+    Both serving modes MUST bucket identically (continuous/batch token
+    identity depends on it), so this is the single definition."""
+    return -(-max_tokens // block_size) * block_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +79,48 @@ class DecodeConfig:
     @property
     def parallel(self) -> bool:
         return self.method in ("fast", "streaming")
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """Resumable decode progress for a batch of rows that all sit at the
+    same block boundary. Produced by ``DiffusionDecoder.prefill`` and
+    advanced one diffusion block at a time by ``decode_block`` — the
+    host-side contract the continuous-batching scheduler
+    (``repro.serving``) is built on: between any two blocks the
+    scheduler may harvest finished rows, compact the batch, or
+    interleave other requests' states on the same compiled step fns."""
+    x: np.ndarray                     # (B, T) tokens; mask id where open
+    committed: np.ndarray             # (B, T) bool
+    done: np.ndarray                  # (B,) early-exited rows
+    prompt_len: int
+    n_blocks: int
+    block_idx: int = 0                # next block to decode
+    cache: Any = None
+    valid_mask: Optional[np.ndarray] = None    # dkv only: (B, T) bool
+    cached_mask: Optional[np.ndarray] = None   # dkv only: (B, T) bool
+    nfe: int = 0
+    q_tokens: int = 0
+    kv_tokens: int = 0
+    steps_per_block: list = dataclasses.field(default_factory=list)
+    early_exits: int = 0
+    prefill_time: float = 0.0
+    decode_time: float = 0.0
+
+    @property
+    def batch(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def total_len(self) -> int:
+        return self.x.shape[1]
+
+    @property
+    def finished(self) -> bool:
+        return self.block_idx >= self.n_blocks or bool(self.done.all())
+
+    def row_finished(self, b: int) -> bool:
+        return bool(self.done[b]) or self.block_idx >= self.n_blocks
 
 
 @dataclasses.dataclass
@@ -186,189 +235,311 @@ class DiffusionDecoder:
             self._fns["dkv"] = jax.jit(f)
         return self._fns["dkv"]
 
-    # ------------------------------------------------------ main loop
+    # ------------------------------------------------------ resumable API
 
-    def generate(self, prompt: np.ndarray) -> GenerateResult:
+    @property
+    def batch_invariant(self) -> bool:
+        """True when per-row outputs are bit-identical regardless of how
+        rows are batched — the property the serving scheduler relies on
+        to compact/backfill batches without changing generations. Holds
+        for every method except dkv, whose step-level KV freezing
+        accumulates ulp-level drift across appends under batch
+        reshaping (empirically verified in tests/test_serving.py)."""
+        return self.dcfg.method != "dkv"
+
+    def jit_cache_size(self) -> int:
+        """Total compiled-variant count across this decoder's step fns —
+        the serving benchmark asserts it stays bounded by shape buckets
+        (no per-request recompilation after warmup)."""
+        total = 0
+        for f in self._fns.values():
+            size = getattr(f, "_cache_size", None)
+            if callable(size):
+                total += size()
+        return total
+
+    def prefill(self, prompt: np.ndarray,
+                cache: Any = None) -> DecodeState:
+        """Admit a batch of prompts: allocate (or adopt a pooled) KV
+        buffer and, for dkv, run the full-sequence prefill pass. The
+        returned state sits at block 0 ready for ``decode_block``."""
         cfg, d = self.cfg, self.dcfg
         B, P = prompt.shape
         L, K = d.gen_len, d.block_size
         T = P + L
-        n_blocks = L // K
-        steps_cap = d.steps_per_block or K
-        mask_id, eos_id = cfg.mask_token_id, cfg.eos_token_id
-
-        x = np.full((B, T), mask_id, np.int32)
+        x = np.full((B, T), cfg.mask_token_id, np.int32)
         x[:, :P] = prompt
         committed = np.zeros((B, T), bool)
         committed[:, :P] = True
-        done = np.zeros((B,), bool)
+        state = DecodeState(x=x, committed=committed,
+                            done=np.zeros((B,), bool), prompt_len=P,
+                            n_blocks=L // K)
+        if d.method == "vanilla":
+            return state
+        if cache is not None:
+            # a pooled buffer from the wrong shape bucket would only
+            # surface later as a cryptic XLA shape error inside the
+            # refresh fn — check the batch/length dims up front
+            tail = jax.tree.leaves(cache["tail"])
+            scan = jax.tree.leaves(cache["scan"])
+            if tail:
+                assert tail[0].shape[0] == B, (tail[0].shape, B)
+                if tail[0].ndim == 4:      # attention KV: (B, T, H, D)
+                    assert tail[0].shape[1] == T, (tail[0].shape, T)
+            elif scan:                     # scan-stacked: (reps, B, ...)
+                assert scan[0].shape[1] == B, (scan[0].shape, B)
+                if scan[0].ndim == 5:
+                    assert scan[0].shape[2] == T, (scan[0].shape, T)
+            state.cache = cache
+        else:
+            state.cache = init_cache(cfg, B, T)
+        if d.method == "dkv":
+            # dKV prefill: one full-sequence pass (prompt + masks),
+            # position-indexed cache; only the prompt KV is valid.
+            tp0 = time.perf_counter()
+            pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+            state.cache, _ = self._prefill_fn()(self.params,
+                                                jnp.asarray(x), pos,
+                                                state.cache)
+            jax.block_until_ready(jax.tree.leaves(state.cache)[0])
+            state.prefill_time = time.perf_counter() - tp0
+            state.nfe += 1
+            state.q_tokens += B * T
+            state.kv_tokens += B * T * T
+            state.valid_mask = np.zeros((B, T), bool)
+            state.valid_mask[:, :P] = True
+            state.cached_mask = state.valid_mask.copy()
+        return state
 
-        nfe = 0
-        q_tokens = 0
-        kv_tokens = 0
-        steps_hist = []
-        early_exits = 0
-        t0 = time.perf_counter()
+    def take_rows(self, state: DecodeState, rows, cache: Any = None,
+                  alloc_cache: bool = True) -> DecodeState:
+        """Extract rows into a standalone state (batch compaction /
+        preemption). For dkv the KV rows are gathered (its cache carries
+        across blocks); every other method rewrites the cache at the
+        next block refresh, so any right-shaped buffer — typically a
+        reused one from the PrefixKVPool — serves as the new backing.
+        ``alloc_cache=False`` defers the backing buffer entirely (a
+        preempted state parked off-slot holds no KV memory); the caller
+        must attach one before the next ``decode_block``."""
+        rows = list(rows)
+        d = self.dcfg
+        sub = DecodeState(
+            x=state.x[rows].copy(), committed=state.committed[rows].copy(),
+            done=state.done[rows].copy(), prompt_len=state.prompt_len,
+            n_blocks=state.n_blocks, block_idx=state.block_idx,
+            steps_per_block=list(state.steps_per_block))
+        if d.method == "dkv":
+            sub.cache = cache_take_rows(state.cache, rows)
+            sub.valid_mask = state.valid_mask[rows].copy()
+            sub.cached_mask = state.cached_mask[rows].copy()
+        elif d.method != "vanilla":
+            if cache is not None:
+                sub.cache = cache
+            elif alloc_cache:
+                sub.cache = init_cache(self.cfg, len(rows), state.total_len)
+        return sub
 
-        use_cache = d.method != "vanilla"
+    def row_output(self, state: DecodeState, b: int):
+        """Finalized generation for one row: tokens after the prompt,
+        truncated at the first EOS (identical to ``finalize`` row b).
+        Returns (tokens (gen_len,), n_generated)."""
+        gen = state.x[b, state.prompt_len:].copy()
+        eos_pos = np.where(gen == self.cfg.eos_token_id)[0]
+        n = int(eos_pos[0]) if len(eos_pos) else len(gen)
+        if len(eos_pos):
+            gen[eos_pos[0]:] = self.cfg.eos_token_id
+        return gen, n
+
+    # ------------------------------------------------------ block step
+
+    def decode_block(self, state: DecodeState) -> DecodeState:
+        """Run the full denoise loop for ``state.block_idx`` and advance
+        to the next block boundary (mutates and returns ``state``).
+        No-op on a finished state."""
+        cfg, d = self.cfg, self.dcfg
+        if state.finished:
+            return state
+        t_block = time.perf_counter()
+        B, P = state.batch, state.prompt_len
+        L, K = d.gen_len, d.block_size
+        T = P + L
+        steps_cap = d.steps_per_block or K
+        mask_id, eos_id = cfg.mask_token_id, cfg.eos_token_id
         frozen = d.frozen_suffix and d.method in ("fast", "streaming")
-        cache = valid = valid_mask = cached_mask = None
-        prefill_time = 0.0
-        if use_cache:
-            cache = init_cache(cfg, B, T)
-            if d.method == "dkv":
-                # dKV prefill: one full-sequence pass (prompt + masks),
-                # position-indexed cache; only the prompt KV is valid.
-                tp0 = time.perf_counter()
-                pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
-                cache, _ = self._prefill_fn()(self.params, jnp.asarray(x),
-                                              pos, cache)
-                jax.block_until_ready(jax.tree.leaves(cache)[0])
-                prefill_time = time.perf_counter() - tp0
-                nfe += 1
-                q_tokens += B * T
-                kv_tokens += B * T * T
-                valid_mask = np.zeros((B, T), bool)
-                valid_mask[:, :P] = True
-                cached_mask = valid_mask.copy()
 
-        for c in range(n_blocks):
-            if done.all():
-                break
-            region = suffix_query_region(
-                gen_start=P, gen_len=L, block_size=K, block_idx=c,
-                window=d.effective_window if d.trailing_position
-                else max(d.effective_window, 0))
-            qpos = region.positions                       # (Sq,)
-            if not d.trailing_position and region.trailing_pos >= 0:
-                qpos = qpos[:-1]
-            Sq = len(qpos)
-            qpos_b = np.broadcast_to(qpos[None], (B, Sq)).copy()
-            bstart, bend = region.block_start, region.block_start + K
+        x, committed, done = state.x, state.committed, state.done
+        cache = state.cache
+        valid_mask, cached_mask = state.valid_mask, state.cached_mask
+        valid = None
+        nfe = q_tokens = kv_tokens = 0
 
-            prefix_len = bstart
-            step = 0
-            toks = None
-            while step < steps_cap:
-                blk_masked = ~committed[:, bstart:bend]
-                if not (blk_masked & ~done[:, None]).any():
-                    break
-                step += 1
-                nfe += 1
+        c = state.block_idx
+        region = suffix_query_region(
+            gen_start=P, gen_len=L, block_size=K, block_idx=c,
+            window=d.effective_window if d.trailing_position
+            else max(d.effective_window, 0))
+        qpos = region.positions                       # (Sq,)
+        if not d.trailing_position and region.trailing_pos >= 0:
+            qpos = qpos[:-1]
+        Sq = len(qpos)
+        qpos_b = np.broadcast_to(qpos[None], (B, Sq)).copy()
+        bstart, bend = region.block_start, region.block_start + K
 
-                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
-                if d.method == "vanilla":
-                    q_tokens += B * T
-                    logits = self._encode_fn()(
-                        self.params, jnp.asarray(x),
-                        jnp.broadcast_to(jnp.arange(T)[None], (B, T)))
-                    blk_logits = logits[:, bstart:bend]
-                    kv_tokens += B * T * T
-                elif d.method == "dkv":
-                    q_tokens += B * Sq
-                    mix = jnp.asarray(
-                        cached_mask[np.arange(B)[:, None], qpos_b])
-                    logits, cache = self._dkv_step_fn()(
-                        self.params, q_toks, jnp.asarray(qpos_b), cache,
-                        jnp.asarray(valid_mask), mix)
-                    blk_logits = logits[:, :K]
-                    # tokens committed earlier (whose fresh KV this step
-                    # was decoded-input based) are now frozen
-                    newly_frozen = committed & ~cached_mask
-                    cached_mask |= newly_frozen
-                    valid_mask |= newly_frozen
-                    kv_tokens += B * Sq * (valid_mask.sum() // B + Sq)
-                elif step == 1:
-                    # block-start refresh (paper §3.3): prefix + query
-                    # region in one encode; caches the prefix KV (and,
-                    # with frozen_suffix, the suffix/trailing KV too)
-                    q_tokens += B * (prefix_len + Sq)
-                    full_pos = np.concatenate(
-                        [np.arange(prefix_len, dtype=np.int32), qpos])
-                    full_pos = np.broadcast_to(full_pos[None],
-                                               (B, prefix_len + Sq))
-                    full_toks = jnp.asarray(
-                        x[np.arange(B)[:, None], full_pos])
-                    if frozen:
-                        logits, cache = self._frozen_refresh_fn()(
-                            self.params, full_toks, jnp.asarray(full_pos),
-                            cache, upto=prefix_len)
-                        vb = np.zeros((B, T), bool)
-                        vb[:, :prefix_len] = True
-                        for pp in qpos[K:]:
-                            vb[:, pp] = True
-                        valid = jnp.asarray(vb)
-                    else:
-                        logits, cache = self._refresh_fn()(
-                            self.params, full_toks, jnp.asarray(full_pos),
-                            cache, upto=prefix_len)
-                        valid = jnp.full((B,), prefix_len, jnp.int32)
-                    blk_logits = logits[:, prefix_len:prefix_len + K]
-                    kv_tokens += B * (prefix_len + Sq) ** 2
-                elif frozen:
-                    q_tokens += B * K
-                    bpos = np.broadcast_to(
-                        np.arange(bstart, bend, dtype=np.int32)[None], (B, K))
-                    logits = self._step_fn()(
-                        self.params, jnp.asarray(x[:, bstart:bend]),
-                        jnp.asarray(bpos), cache, valid)
-                    blk_logits = logits[:, :K]
-                    kv_tokens += B * K * (prefix_len + Sq + K)
-                else:
-                    q_tokens += B * Sq
-                    logits = self._step_fn()(
-                        self.params, q_toks, jnp.asarray(qpos_b), cache,
-                        valid)
-                    blk_logits = logits[:, :K]
-                    kv_tokens += B * Sq * (prefix_len + Sq)
-
-                blk_np = np.array(blk_logits, np.float32)
-                blk_np[..., mask_id] = -1e30  # LLaDA: never emit [MASK]
-                conf, toks = sched.confidence_and_tokens(blk_np)
-                conf, toks = np.asarray(conf), np.asarray(toks)
-
-                if d.parallel:
-                    if d.method == "streaming":
-                        r_mask = blk_masked.mean(axis=1)
-                        tau = sched.dynamic_threshold(d.tau0, d.alpha, r_mask)
-                    else:
-                        tau = np.full((B,), d.tau0)
-                    commit = np.array(sched.select_tokens(
-                        jnp.asarray(conf), jnp.asarray(blk_masked),
-                        jnp.asarray(tau)))
-                else:
-                    n_commit = max(1, K // steps_cap)
-                    commit = np.array(sched.fixed_rate_select(
-                        jnp.asarray(conf), jnp.asarray(blk_masked), n_commit))
-                sel = np.where(commit)
-                x[sel[0], bstart + sel[1]] = toks[sel]
-                committed[:, bstart:bend] |= commit
-
-            steps_hist.append(step)
-
-            # finalize block: commit any stragglers (steps cap reached)
+        prefix_len = bstart
+        step = 0
+        toks = None
+        while step < steps_cap:
             blk_masked = ~committed[:, bstart:bend]
-            if blk_masked.any() and toks is not None:
-                x[:, bstart:bend] = np.where(blk_masked, toks, x[:, bstart:bend])
-            committed[:, bstart:bend] = True
-            # Early exit (paper §3.3): a block that decoded an EOS makes
-            # all *subsequent* blocks skippable for that row.
-            if d.early_exit:
-                hit = (x[:, bstart:bend] == eos_id).any(axis=1) & ~done
-                if hit.any():
-                    early_exits += int(hit.sum())
-                    done |= hit
+            if not (blk_masked & ~done[:, None]).any():
+                break
+            step += 1
+            nfe += 1
 
-        gen = x[:, P:].copy()
+            q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
+            if d.method == "vanilla":
+                q_tokens += B * T
+                logits = self._encode_fn()(
+                    self.params, jnp.asarray(x),
+                    jnp.broadcast_to(jnp.arange(T)[None], (B, T)))
+                blk_logits = logits[:, bstart:bend]
+                kv_tokens += B * T * T
+            elif d.method == "dkv":
+                q_tokens += B * Sq
+                mix = jnp.asarray(
+                    cached_mask[np.arange(B)[:, None], qpos_b])
+                logits, cache = self._dkv_step_fn()(
+                    self.params, q_toks, jnp.asarray(qpos_b), cache,
+                    jnp.asarray(valid_mask), mix)
+                blk_logits = logits[:, :K]
+                # tokens committed earlier (whose fresh KV this step
+                # was decoded-input based) are now frozen
+                newly_frozen = committed & ~cached_mask
+                cached_mask |= newly_frozen
+                valid_mask |= newly_frozen
+                kv_tokens += B * Sq * (valid_mask.sum() // B + Sq)
+            elif step == 1:
+                # block-start refresh (paper §3.3): prefix + query
+                # region in one encode; caches the prefix KV (and,
+                # with frozen_suffix, the suffix/trailing KV too)
+                q_tokens += B * (prefix_len + Sq)
+                full_pos = np.concatenate(
+                    [np.arange(prefix_len, dtype=np.int32), qpos])
+                full_pos = np.broadcast_to(full_pos[None],
+                                           (B, prefix_len + Sq))
+                full_toks = jnp.asarray(
+                    x[np.arange(B)[:, None], full_pos])
+                if frozen:
+                    logits, cache = self._frozen_refresh_fn()(
+                        self.params, full_toks, jnp.asarray(full_pos),
+                        cache, upto=prefix_len)
+                    vb = np.zeros((B, T), bool)
+                    vb[:, :prefix_len] = True
+                    for pp in qpos[K:]:
+                        vb[:, pp] = True
+                    valid = jnp.asarray(vb)
+                else:
+                    logits, cache = self._refresh_fn()(
+                        self.params, full_toks, jnp.asarray(full_pos),
+                        cache, upto=prefix_len)
+                    valid = jnp.full((B,), prefix_len, jnp.int32)
+                blk_logits = logits[:, prefix_len:prefix_len + K]
+                kv_tokens += B * (prefix_len + Sq) ** 2
+            elif frozen:
+                q_tokens += B * K
+                bpos = np.broadcast_to(
+                    np.arange(bstart, bend, dtype=np.int32)[None], (B, K))
+                logits = self._step_fn()(
+                    self.params, jnp.asarray(x[:, bstart:bend]),
+                    jnp.asarray(bpos), cache, valid)
+                blk_logits = logits[:, :K]
+                kv_tokens += B * K * (prefix_len + Sq + K)
+            else:
+                q_tokens += B * Sq
+                logits = self._step_fn()(
+                    self.params, q_toks, jnp.asarray(qpos_b), cache,
+                    valid)
+                blk_logits = logits[:, :K]
+                kv_tokens += B * Sq * (prefix_len + Sq)
+
+            blk_np = np.array(blk_logits, np.float32)
+            blk_np[..., mask_id] = -1e30  # LLaDA: never emit [MASK]
+            conf, toks = sched.confidence_and_tokens(blk_np)
+            conf, toks = np.asarray(conf), np.asarray(toks)
+
+            if d.parallel:
+                if d.method == "streaming":
+                    r_mask = blk_masked.mean(axis=1)
+                    tau = sched.dynamic_threshold(d.tau0, d.alpha, r_mask)
+                else:
+                    tau = np.full((B,), d.tau0)
+                commit = np.array(sched.select_tokens(
+                    jnp.asarray(conf), jnp.asarray(blk_masked),
+                    jnp.asarray(tau)))
+            else:
+                n_commit = max(1, K // steps_cap)
+                commit = np.array(sched.fixed_rate_select(
+                    jnp.asarray(conf), jnp.asarray(blk_masked), n_commit))
+            sel = np.where(commit)
+            x[sel[0], bstart + sel[1]] = toks[sel]
+            committed[:, bstart:bend] |= commit
+
+        state.steps_per_block.append(step)
+
+        # finalize block: commit any stragglers (steps cap reached)
+        blk_masked = ~committed[:, bstart:bend]
+        if blk_masked.any() and toks is not None:
+            x[:, bstart:bend] = np.where(blk_masked, toks, x[:, bstart:bend])
+        committed[:, bstart:bend] = True
+        # Early exit (paper S3.3): a block that decoded an EOS makes
+        # all *subsequent* blocks skippable for that row.
+        if d.early_exit:
+            hit = (x[:, bstart:bend] == eos_id).any(axis=1) & ~done
+            if hit.any():
+                state.early_exits += int(hit.sum())
+                done |= hit
+
+        state.cache = cache
+        state.valid_mask = valid_mask
+        state.cached_mask = cached_mask
+        state.block_idx = c + 1
+        state.nfe += nfe
+        state.q_tokens += q_tokens
+        state.kv_tokens += kv_tokens
+        state.decode_time += time.perf_counter() - t_block
+        return state
+
+    # ------------------------------------------------------ main loop
+
+    def finalize(self, state: DecodeState) -> GenerateResult:
+        """Aggregate a finished (or early-stopped) state into the
+        monolithic GenerateResult: rows truncated at their first EOS."""
+        P, L = state.prompt_len, self.dcfg.gen_len
+        eos_id = self.cfg.eos_token_id
+        gen = state.x[:, P:].copy()
         # truncate each row at first EOS (tokens after EOS don't count)
         tokens_generated = 0
-        for b in range(B):
+        for b in range(state.batch):
             eos_pos = np.where(gen[b] == eos_id)[0]
             n = eos_pos[0] if len(eos_pos) else L
             tokens_generated += int(n)
             if len(eos_pos):
                 gen[b, eos_pos[0]:] = eos_id
-        wall = time.perf_counter() - t0
-        return GenerateResult(gen, nfe, steps_hist, wall, q_tokens,
-                              kv_tokens, tokens_generated, early_exits,
-                              prefill_time)
+        wall = state.prefill_time + state.decode_time
+        return GenerateResult(gen, state.nfe, list(state.steps_per_block),
+                              wall, state.q_tokens, state.kv_tokens,
+                              tokens_generated, state.early_exits,
+                              state.prefill_time)
+
+    def generate(self, prompt: np.ndarray) -> GenerateResult:
+        """Monolithic generation: prefill + every block to completion.
+        This is the synchronous (mode="batch") serving path; the
+        continuous scheduler in repro.serving drives the same
+        prefill/decode_block pair directly and interleaves requests at
+        block boundaries."""
+        t0 = time.perf_counter()
+        state = self.prefill(prompt)
+        while not state.finished:
+            self.decode_block(state)
+        res = self.finalize(state)
+        res.wall_time = time.perf_counter() - t0
+        return res

@@ -1,7 +1,15 @@
-"""Batched serving engine: a minimal vLLM-style front end over the
-diffusion decoder. Requests are queued, grouped by prompt length into
-batches, decoded with Streaming-dLLM, and returned with per-request
-stats. Prompt-length bucketing keeps the compiled step shapes stable.
+"""Batched serving engine front end.
+
+Two modes over one API:
+
+``mode="continuous"`` (default) — delegates to the continuous-batching
+subsystem (``repro.serving``): block-granular scheduling, slot
+backfill on EOS early exit, shared prefix-KV pool, streaming chunks.
+
+``mode="batch"`` — the legacy synchronous path: requests are grouped by
+(prompt_len, gen_len) shape bucket, the largest group is decoded to
+completion, stragglers pin the batch. Kept as the baseline the serving
+benchmark compares against.
 """
 from __future__ import annotations
 
@@ -12,7 +20,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.decoder import DecodeConfig, DiffusionDecoder
+from repro.core.decoder import (DecodeConfig, DiffusionDecoder,
+                                round_up_blocks)
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.config import ModelConfig
 
@@ -22,6 +31,7 @@ class Request:
     uid: int
     prompt: str
     max_tokens: int = 64
+    prompt_tokens: Optional[np.ndarray] = None   # encoded once at submit
 
 
 @dataclasses.dataclass
@@ -35,9 +45,11 @@ class Completion:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, dcfg: DecodeConfig,
-                 max_batch: int = 32):
+                 max_batch: int = 32, mode: str = "continuous"):
+        assert mode in ("batch", "continuous"), mode
         self.cfg = cfg
         self.dcfg = dcfg
+        self.mode = mode
         self.tok = ByteTokenizer(cfg.vocab_size)
         self.max_batch = max_batch
         self._decoders: Dict[int, DiffusionDecoder] = {}
@@ -45,10 +57,19 @@ class ServingEngine:
         self._queue: List[Request] = []
         self._uid = 0
         self.stats = defaultdict(float)
+        self._continuous = None
+        if mode == "continuous":
+            from repro.serving import ContinuousEngine
+            self._continuous = ContinuousEngine(
+                cfg, params, dcfg, max_slots=max_batch, tokenizer=self.tok)
+            self.stats = self._continuous.stats   # one shared counter dict
 
     def submit(self, prompt: str, max_tokens: int = 64) -> int:
+        if self._continuous is not None:
+            return self._continuous.submit(prompt, max_tokens)
         self._uid += 1
-        self._queue.append(Request(self._uid, prompt, max_tokens))
+        self._queue.append(Request(self._uid, prompt, max_tokens,
+                                   self.tok.encode(prompt)))
         return self._uid
 
     def _decoder(self, gen_len: int) -> DiffusionDecoder:
@@ -59,19 +80,24 @@ class ServingEngine:
         return self._decoders[gen_len]
 
     def step(self) -> List[Completion]:
-        """Serve one batch: group queued requests by (prompt_len,
-        gen_len) and decode the largest group."""
+        """Serve one scheduling round. Continuous mode: one block for
+        every live gang. Batch mode: group queued requests by
+        (prompt_len, gen_len) and decode the largest group to
+        completion."""
+        if self._continuous is not None:
+            return [Completion(c.uid, c.text, c.tokens, c.latency_s, c.nfe)
+                    for c in self._continuous.step()]
         if not self._queue:
             return []
         groups = defaultdict(list)
         for r in self._queue:
-            gl = -(-r.max_tokens // self.dcfg.block_size) * self.dcfg.block_size
-            groups[(len(self.tok.encode(r.prompt)), gl)].append(r)
+            gl = round_up_blocks(r.max_tokens, self.dcfg.block_size)
+            groups[(len(r.prompt_tokens), gl)].append(r)
         key = max(groups, key=lambda k: len(groups[k]))
         batch = groups[key][: self.max_batch]
-        for r in batch:
-            self._queue.remove(r)
-        prompts = np.stack([self.tok.encode(r.prompt) for r in batch])
+        taken = {id(r) for r in batch}
+        self._queue = [r for r in self._queue if id(r) not in taken]
+        prompts = np.stack([r.prompt_tokens for r in batch])
         t0 = time.perf_counter()
         res = self._decoder(key[1]).generate(prompts.astype(np.int32))
         dt = time.perf_counter() - t0
@@ -84,6 +110,9 @@ class ServingEngine:
                 for i, r in enumerate(batch)]
 
     def run_to_completion(self) -> List[Completion]:
+        if self._continuous is not None:
+            return [Completion(c.uid, c.text, c.tokens, c.latency_s, c.nfe)
+                    for c in self._continuous.run_to_completion()]
         out: List[Completion] = []
         while self._queue:
             out.extend(self.step())
@@ -91,4 +120,6 @@ class ServingEngine:
 
     @property
     def throughput(self) -> float:
+        if self._continuous is not None:
+            return self._continuous.throughput
         return self.stats["tokens"] / max(self.stats["time_s"], 1e-9)

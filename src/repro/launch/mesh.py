@@ -11,7 +11,19 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.6 names mesh axis kinds explicitly; older jax (the CI
+    # image ships 0.4.x) predates AxisType and treats every axis as
+    # what AxisType.Auto means, so omitting the kwarg is equivalent.
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
@@ -21,15 +33,13 @@ def make_production_mesh(*, multi_pod: bool = False, data: int = 16,
     production always uses the defaults."""
     shape = (pods, data, model) if multi_pod else (data, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (real or fake) devices exist —
     used by sharded smoke tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def data_axes_of(mesh) -> tuple:

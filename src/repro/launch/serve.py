@@ -1,8 +1,10 @@
 """Serving launcher: load a checkpoint (or train briefly), start the
-batched engine, and serve synthetic requests with the selected method.
+engine in continuous or synchronous-batch mode, and serve synthetic
+requests with the selected method.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tiny \
-        --method streaming --n 32 [--ckpt results/bench_model]
+        --method streaming --n 32 --mode continuous \
+        [--ckpt results/bench_model] [--stream]
 """
 from __future__ import annotations
 
@@ -16,13 +18,19 @@ def main():
     ap.add_argument("--arch", default="tiny")
     ap.add_argument("--method", default="streaming",
                     choices=["vanilla", "dkv", "prefix", "fast", "streaming"])
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "batch"])
     ap.add_argument("--n", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="continuous mode: concurrent decode lanes")
     ap.add_argument("--window", type=int, default=16)
     ap.add_argument("--tau0", type=float, default=0.9)
     ap.add_argument("--alpha", type=float, default=0.3)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--train-steps", type=int, default=600)
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-block chunks as they commit")
     args = ap.parse_args()
 
     import jax
@@ -43,17 +51,43 @@ def main():
                                            batch_size=32, seq_len=44))
     d = DecodeConfig(method=args.method, gen_len=args.gen_len, block_size=8,
                      window=args.window, tau0=args.tau0, alpha=args.alpha)
-    eng = ServingEngine(cfg, params, d)
     tok = ByteTokenizer(cfg.vocab_size)
     ds = ArithmeticDataset(tok, seq_len=44)
     samples = ds.eval_set(args.n)
+    if args.mode == "continuous":
+        from repro.serving import ContinuousEngine
+        eng = ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
+                               tokenizer=tok)
+        for s in samples:
+            eng.submit(s.prompt, max_tokens=args.gen_len)
+        if args.stream:
+            done = []
+            eng.on_chunk(None, lambda ch: print(
+                f"  uid={ch.uid} block={ch.block_idx} "
+                f"{'[done] ' if ch.finished else ''}{ch.text!r}"))
+            while not eng.scheduler.idle:
+                done.extend(eng.step())
+        else:
+            done = eng.run_to_completion()
+        snap = eng.metrics.snapshot()
+        hits = sum(int(c.text.strip() == s.answer)
+                   for c, s in zip(sorted(done, key=lambda c: c.uid), samples))
+        print(f"mode=continuous method={args.method} served={len(done)} "
+              f"acc={hits/len(done):.2f} tok/s={snap['throughput_tok_s']:.1f} "
+              f"p50={snap['latency_p50_s']*1e3:.0f}ms "
+              f"p99={snap['latency_p99_s']*1e3:.0f}ms "
+              f"ttfb_p50={snap['ttfb_p50_s']*1e3:.0f}ms "
+              f"occ={snap['mean_occupancy']:.2f} "
+              f"jit_cache={eng.jit_cache_size()}")
+        return
+    eng = ServingEngine(cfg, params, d, mode="batch")
     for s in samples:
         eng.submit(s.prompt, max_tokens=args.gen_len)
     done = eng.run_to_completion()
     hits = sum(int(c.text.strip() == s.answer)
                for c, s in zip(sorted(done, key=lambda c: c.uid), samples))
-    print(f"method={args.method} served={len(done)} acc={hits/len(done):.2f} "
-          f"tok/s={eng.throughput:.1f}")
+    print(f"mode=batch method={args.method} served={len(done)} "
+          f"acc={hits/len(done):.2f} tok/s={eng.throughput:.1f}")
 
 
 if __name__ == "__main__":

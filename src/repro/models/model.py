@@ -142,6 +142,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"scan": scan_caches, "tail": tail_caches}
 
 
+def cache_take_rows(cache: dict, rows) -> dict:
+    """Gather a sub-batch of a cache pytree: batch is axis 1 for the
+    scan-stacked pattern groups (leading axis is reps) and axis 0 for
+    tail layers. Used by the serving scheduler to compact a batch when
+    some rows finish (only the dKV baseline carries KV across block
+    boundaries; the other methods rewrite it at the next refresh)."""
+    idx = jnp.asarray(rows, jnp.int32)
+    return {
+        "scan": jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
+                             cache["scan"]),
+        "tail": jax.tree.map(lambda a: jnp.take(a, idx, axis=0),
+                             cache["tail"]),
+    }
+
+
 # ------------------------------------------------------------- layers
 
 def _write_kv(buf, new, kv_valid):

@@ -1,0 +1,28 @@
+"""Continuous-batching serving subsystem (vLLM-style, at diffusion-block
+granularity).
+
+Layering:
+    ContinuousEngine  — user API: submit / step / stream / metrics
+    BlockScheduler    — gangs, admission control, compaction, preemption
+    PrefixKVPool      — shape-bucketed KV buffer reuse
+    StreamRouter      — per-block chunk callbacks / iterators
+    ServeMetrics      — TTFB, latency percentiles, occupancy, NFE
+
+Built on the resumable ``DiffusionDecoder.prefill`` / ``decode_block``
+API in ``repro.core.decoder``. The legacy synchronous path survives as
+``repro.core.engine.ServingEngine(mode="batch")``.
+"""
+from repro.serving.engine import ContinuousEngine
+from repro.serving.metrics import RequestMetrics, ServeMetrics, percentile
+from repro.serving.pool import PrefixKVPool
+from repro.serving.scheduler import BlockScheduler, Gang
+from repro.serving.stream import RequestStream, StreamRouter
+from repro.serving.types import (BlockChunk, Completion, ServeRequest,
+                                 round_up_blocks)
+
+__all__ = [
+    "ContinuousEngine", "BlockScheduler", "Gang", "PrefixKVPool",
+    "StreamRouter", "RequestStream", "ServeMetrics", "RequestMetrics",
+    "percentile", "BlockChunk", "Completion", "ServeRequest",
+    "round_up_blocks",
+]

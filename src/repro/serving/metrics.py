@@ -1,0 +1,82 @@
+"""Serving metrics: per-request latency records and fleet aggregates."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+def percentile(values, q: float) -> float:
+    if not values:
+        return 0.0
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    uid: int
+    queue_s: float        # submit -> admitted
+    ttfb_s: float         # submit -> first block committed
+    latency_s: float      # submit -> finished
+    n_tokens: int
+    nfe: int
+    n_blocks: int
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Aggregated over one engine lifetime. The engine samples slot
+    occupancy every scheduler tick and registers each completion."""
+    max_slots: int = 0
+    requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
+    ticks: int = 0
+    busy_time_s: float = 0.0           # wall time with >= 1 live row
+    wall_time_s: float = 0.0
+    occupancy_weighted: float = 0.0    # sum(live/max_slots * tick_dt)
+    total_nfe: int = 0
+
+    def sample_tick(self, live_rows: int, tick_dt: float) -> None:
+        self.ticks += 1
+        self.wall_time_s += tick_dt
+        if live_rows:
+            self.busy_time_s += tick_dt
+        if self.max_slots:
+            self.occupancy_weighted += (live_rows / self.max_slots) * tick_dt
+
+    def add_request(self, rm: RequestMetrics) -> None:
+        self.requests.append(rm)
+        self.total_nfe += rm.nfe
+
+    # ------------------------------------------------------ aggregates
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.n_tokens for r in self.requests)
+
+    @property
+    def throughput(self) -> float:
+        """Generated tokens per second of scheduler wall time."""
+        return self.total_tokens / max(self.wall_time_s, 1e-9)
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_weighted / max(self.wall_time_s, 1e-9)
+
+    def snapshot(self) -> Dict:
+        lat = [r.latency_s for r in self.requests]
+        ttfb = [r.ttfb_s for r in self.requests]
+        return {
+            "requests": len(self.requests),
+            "tokens": self.total_tokens,
+            "wall_time_s": self.wall_time_s,
+            "throughput_tok_s": self.throughput,
+            "mean_occupancy": self.mean_occupancy,
+            "total_nfe": self.total_nfe,
+            "nfe_per_request": (self.total_nfe / len(self.requests)
+                                if self.requests else 0.0),
+            "latency_p50_s": percentile(lat, 50),
+            "latency_p99_s": percentile(lat, 99),
+            "ttfb_p50_s": percentile(ttfb, 50),
+            "ttfb_p99_s": percentile(ttfb, 99),
+        }

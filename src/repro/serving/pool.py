@@ -1,0 +1,71 @@
+"""Shape-bucketed KV-cache buffer pool.
+
+Every decode method except dKV rewrites the prefix (and, with
+``frozen_suffix``, the pruned-suffix) KV at each block refresh and masks
+staleness with ``kv_valid``, so a buffer handed to a new request needs
+no zeroing: reuse is free. The pool therefore only has to bound
+*allocation* churn — ``init_cache`` builds a whole per-layer pytree of
+(B, T, H, D) zeros, which at production shapes is the dominant
+per-request host cost and a fresh device allocation each time.
+
+Buffers are keyed by ``(batch, total_len)`` — the same bucketing the
+scheduler uses for gangs — and retained on a bounded free list with
+oldest-first eviction.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_cache
+
+
+class PrefixKVPool:
+    def __init__(self, cfg: ModelConfig, max_free: int = 8):
+        self.cfg = cfg
+        self.max_free = max_free
+        self._free: List[Tuple[int, Tuple[int, int], Any]] = []
+        self._seq = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def acquire(self, batch: int, total_len: int):
+        """Return a cache pytree for the bucket, reusing the most
+        recently released matching buffer when one exists."""
+        key = (batch, total_len)
+        for i in range(len(self._free) - 1, -1, -1):
+            if self._free[i][1] == key:
+                _, _, cache = self._free.pop(i)
+                self.hits += 1
+                return cache
+        self.misses += 1
+        return init_cache(self.cfg, batch, total_len)
+
+    def release(self, batch: int, total_len: int, cache) -> None:
+        if cache is None:
+            return
+        self._seq += 1
+        self._free.append((self._seq, (batch, total_len), cache))
+        while len(self._free) > self.max_free:
+            self._free.pop(0)
+            self.evictions += 1
+
+    @property
+    def free_buffers(self) -> int:
+        return len(self._free)
+
+    def free_bytes(self) -> int:
+        total = 0
+        for _, _, cache in self._free:
+            total += sum(getattr(leaf, "nbytes", 0)
+                         for leaf in jax.tree.leaves(cache))
+        return total
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "free_buffers": len(self._free),
+                "free_bytes": self.free_bytes()}

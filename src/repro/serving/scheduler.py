@@ -1,0 +1,354 @@
+"""Continuous batching at diffusion-block granularity.
+
+The unit of work is one *block* of one *gang* — a batch of requests
+sharing a shape bucket ``(prompt_len, gen_len)`` that advance in
+lockstep through ``DiffusionDecoder.decode_block``. Every scheduler
+tick advances each live gang by one block, then harvests: finished rows
+(EOS early exit or last block) emit their final chunk immediately, and
+the gang is *compacted* — live rows are gathered into the next
+power-of-two batch bucket, freed slots are backfilled from the waiting
+queue at the same tick, and the old KV buffer returns to the
+``PrefixKVPool``. Compiled step shapes are therefore fixed per
+(bucket, batch-pow2, block-index) triple: after warmup no request
+causes a recompile.
+
+Exactness: compaction relies on ``DiffusionDecoder.batch_invariant`` —
+per-row results are bit-identical under batch reshaping for every
+method except dkv, whose step-level KV freezing drifts at ulp level
+when the batch changes. dkv gangs therefore keep their admitted batch
+until every row finishes (matching the synchronous engine), while the
+other methods shrink and backfill freely.
+
+Preemption is block-level: ``preempt(uid)`` extracts the row's
+``DecodeState`` at the next block boundary, parks it without a KV
+buffer, and re-admits it ahead of the waiting queue when a slot frees —
+resuming at the exact block it left off.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.decoder import DecodeConfig, DecodeState, DiffusionDecoder
+from repro.models.config import ModelConfig
+from repro.serving.pool import PrefixKVPool
+from repro.serving.types import BlockChunk, Completion, ServeRequest
+
+
+def _pow2_ge(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _pow2_le(n: int) -> int:
+    assert n >= 1
+    return 1 << (n.bit_length() - 1)
+
+
+class Gang:
+    """A batch of requests decoding in lockstep, one block per tick.
+    ``requests[i] is None`` marks a padding or vacated lane."""
+
+    def __init__(self, decoder: DiffusionDecoder, state: DecodeState,
+                 requests: List[Optional[ServeRequest]]):
+        self.decoder = decoder
+        self.state = state
+        self.requests = requests
+        # rows whose final chunk has been emitted (padding lanes never emit)
+        self.emitted = [r is None for r in requests]
+        # state.nfe high-water mark already attributed to requests. A
+        # fresh gang starts at 0 so the dkv prefill pass (counted into
+        # state.nfe by prefill()) reaches the first harvest's delta;
+        # compacted/resumed states restart their counters at 0 too.
+        self.nfe_seen = 0
+
+    @property
+    def batch(self) -> int:
+        return self.state.batch
+
+    def live_rows(self) -> List[int]:
+        """Rows still producing output."""
+        return [i for i, r in enumerate(self.requests)
+                if r is not None and not self.emitted[i]]
+
+    def open_rows(self) -> List[int]:
+        """Rows that still need future blocks (drive compaction)."""
+        return [i for i, r in enumerate(self.requests)
+                if r is not None and not self.state.row_finished(i)]
+
+
+class BlockScheduler:
+    def __init__(self, cfg: ModelConfig, params, dcfg: DecodeConfig, *,
+                 max_slots: int = 8, max_gang: Optional[int] = None,
+                 pool: Optional[PrefixKVPool] = None,
+                 max_waiting: Optional[int] = None,
+                 tokenizer=None, mesh=None, pad_pow2: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.dcfg = dcfg
+        self.max_slots = max_slots
+        self.max_gang = min(max_gang or max_slots, max_slots)
+        # pad_pow2 snaps gang sizes to a power-of-two ladder: fewest
+        # compiled batch shapes (log2(max_slots) sizes), at the price of
+        # pad rows that burn compute — worth it when compiles are the
+        # scarce resource (large accelerator graphs). The default uses
+        # exact sizes: at most max_slots distinct batch shapes, and
+        # every freed row immediately stops costing FLOPs.
+        self.pad_pow2 = pad_pow2
+        self.pool = pool if pool is not None else PrefixKVPool(cfg)
+        self.max_waiting = max_waiting
+        self.tok = tokenizer
+        self.mesh = mesh
+        self.waiting: Deque[ServeRequest] = deque()
+        self.paused: Deque[Tuple[ServeRequest, DecodeState,
+                                 DiffusionDecoder]] = deque()
+        self.gangs: List[Gang] = []
+        self._decoders: Dict[int, DiffusionDecoder] = {}
+        self._preempt: set = set()
+        self._uid = 0
+        self.last_decoded_rows = 0
+
+    # ------------------------------------------------------ bookkeeping
+
+    def _decoder(self, gen_len: int) -> DiffusionDecoder:
+        if gen_len not in self._decoders:
+            d = dataclasses.replace(self.dcfg, gen_len=gen_len)
+            self._decoders[gen_len] = DiffusionDecoder(
+                self.cfg, self.params, d, mesh=self.mesh)
+        return self._decoders[gen_len]
+
+    @property
+    def slots_used(self) -> int:
+        return sum(g.batch for g in self.gangs)
+
+    @property
+    def live_rows(self) -> int:
+        return sum(len(g.live_rows()) for g in self.gangs)
+
+    @property
+    def idle(self) -> bool:
+        return not (self.waiting or self.paused or self.gangs)
+
+    def jit_cache_size(self) -> int:
+        return sum(d.jit_cache_size() for d in self._decoders.values())
+
+    # ------------------------------------------------------ submission
+
+    def submit(self, prompt_tokens: np.ndarray, gen_len: int,
+               max_tokens: int) -> ServeRequest:
+        """Admission control: reject (raise) beyond ``max_waiting``."""
+        if self.max_waiting is not None \
+                and len(self.waiting) >= self.max_waiting:
+            raise RuntimeError(
+                f"admission rejected: waiting queue at max_waiting="
+                f"{self.max_waiting}")
+        self._uid += 1
+        req = ServeRequest(self._uid, np.asarray(prompt_tokens, np.int32),
+                           gen_len, max_tokens, time.perf_counter())
+        self.waiting.append(req)
+        return req
+
+    def preempt(self, uid: int) -> None:
+        """Vacate the request's slot at the next block boundary; the
+        request resumes from the same block once a slot frees. (For the
+        non-batch-invariant dkv baseline the remaining rows keep their
+        lanes, so only the preempted request itself is perturbed.)
+        Unknown/finished uids are ignored — a stale flag must never
+        outlive its request, or it would fire on a future uid."""
+        active = any(r is not None and r.uid == uid
+                     for g in self.gangs for r in g.requests)
+        if active:
+            self._preempt.add(uid)
+
+    # ------------------------------------------------------ tick
+
+    def tick(self) -> Tuple[List[BlockChunk], List[Completion]]:
+        """One scheduler round: admit → advance every gang one block →
+        harvest chunks/completions → compact + backfill."""
+        self._admit()
+        # rows whose decode this tick actually pays for — sampled before
+        # the decode loop so occupancy isn't attributed post-compaction
+        self.last_decoded_rows = self.live_rows
+        chunks: List[BlockChunk] = []
+        completions: List[Completion] = []
+        for gang in self.gangs:
+            gang.decoder.decode_block(gang.state)
+            c, comp = self._harvest(gang, gang.state.nfe - gang.nfe_seen)
+            gang.nfe_seen = gang.state.nfe
+            chunks.extend(c)
+            completions.extend(comp)
+        self._compact()
+        # backfill freed slots within the same tick so the next tick
+        # decodes at full occupancy
+        self._admit()
+        return chunks, completions
+
+    # ------------------------------------------------------ admission
+
+    def _admit(self) -> None:
+        free = self.max_slots - self.slots_used
+        # resumed (preempted) states go first, at their original block
+        while self.paused and free > 0:
+            req, state, decoder = self.paused.popleft()
+            if state.cache is None and decoder.dcfg.method != "vanilla":
+                state.cache = self.pool.acquire(state.batch, state.total_len)
+            if req.admit_time < 0:   # resume keeps the first admission
+                req.admit_time = time.perf_counter()
+            self.gangs.append(Gang(decoder, state, [req]))
+            free -= state.batch
+        if free <= 0 or not self.waiting:
+            return
+        # bucket the queue once per _admit (not per admitted gang — a
+        # large backlog is exactly the continuous-batching regime)
+        groups: Dict[tuple, List[ServeRequest]] = {}
+        for r in self.waiting:
+            groups.setdefault(r.bucket, []).append(r)
+        admitted_ids = set()
+        while free > 0:
+            # Largest shape group first (mirrors the synchronous
+            # engine), but never fragment a group across gangs just to
+            # fill freed slots: each block call has a large fixed cost
+            # (weight traffic), so splitting one would-be batch into two
+            # gangs costs more than briefly idling the slots. A group is
+            # admitted when its full target batch fits. (pad_pow2 mode
+            # instead caps the gang at the pow2 ladder below max_slots —
+            # a padded target larger than max_slots could never fit and
+            # would livelock the queue.)
+            admitted = False
+            for bucket, group in sorted(groups.items(),
+                                        key=lambda kv: -len(kv[1])):
+                if not group:
+                    continue
+                decoder = self._decoder(bucket[1])
+                if self.pad_pow2 and decoder.batch_invariant:
+                    n = min(len(group),
+                            _pow2_le(min(free, self.max_gang)))
+                    padded = _pow2_ge(n)
+                else:
+                    n = min(len(group), self.max_gang)
+                    padded = n
+                if n == 0 or padded > free:
+                    continue
+                batch_reqs = group[:n]
+                del group[:n]
+                admitted_ids.update(id(r) for r in batch_reqs)
+                self.gangs.append(
+                    self._form_gang(decoder, bucket, batch_reqs, padded))
+                admitted = True
+                free = self.max_slots - self.slots_used
+                break
+            if not admitted:
+                break
+        if admitted_ids:
+            self.waiting = deque(r for r in self.waiting
+                                 if id(r) not in admitted_ids)
+
+    def _form_gang(self, decoder: DiffusionDecoder, bucket, batch_reqs,
+                   padded: int) -> Gang:
+        P, gen_len = bucket
+        n = len(batch_reqs)
+        prompts = np.stack(
+            [r.prompt_tokens for r in batch_reqs]
+            + [batch_reqs[0].prompt_tokens] * (padded - n)).astype(np.int32)
+        cache = None
+        if decoder.dcfg.method != "vanilla":
+            cache = self.pool.acquire(padded, P + gen_len)
+        state = decoder.prefill(prompts, cache=cache)
+        now = time.perf_counter()
+        for r in batch_reqs:
+            r.admit_time = now
+        rows: List[Optional[ServeRequest]] = \
+            list(batch_reqs) + [None] * (padded - n)
+        return Gang(decoder, state, rows)
+
+    # ------------------------------------------------------ harvest
+
+    def _decode_text(self, tokens: np.ndarray) -> str:
+        return self.tok.decode(tokens) if self.tok is not None else ""
+
+    def _harvest(self, gang: Gang, dnfe: int):
+        st = gang.state
+        K = gang.decoder.dcfg.block_size
+        P = st.prompt_len
+        eos = self.cfg.eos_token_id
+        bidx = st.block_idx - 1
+        bstart = P + bidx * K
+        now = time.perf_counter()
+        chunks: List[BlockChunk] = []
+        completions: List[Completion] = []
+        for i, req in enumerate(gang.requests):
+            if req is None or gang.emitted[i]:
+                continue
+            req.nfe += dnfe
+            if req.first_block_time < 0:
+                req.first_block_time = now
+            finished = st.row_finished(i)
+            if bidx >= 0:   # a zero-block request decodes nothing
+                req.blocks_decoded += 1
+                toks = st.x[i, bstart:bstart + K].copy()
+                chunks.append(BlockChunk(req.uid, bidx, toks,
+                                         self._decode_text(toks),
+                                         finished,
+                                         bool((toks == eos).any())))
+            if finished:
+                gang.emitted[i] = True
+                self._preempt.discard(req.uid)  # flag dies with request
+                req.finish_time = now
+                out, n_tok = gang.decoder.row_output(st, i)
+                completions.append(Completion(
+                    uid=req.uid, text=self._decode_text(out), tokens=out,
+                    latency_s=now - req.submit_time, nfe=req.nfe,
+                    ttfb_s=req.first_block_time - req.submit_time,
+                    queue_s=req.admit_time - req.submit_time,
+                    n_tokens=n_tok, n_blocks=req.blocks_decoded))
+        return chunks, completions
+
+    # ------------------------------------------------------ compaction
+
+    def _compact(self) -> None:
+        kept: List[Gang] = []
+        for gang in self.gangs:
+            st = gang.state
+            T = st.total_len
+            # block-level preemption: extract flagged rows first
+            for i in list(gang.open_rows()):
+                req = gang.requests[i]
+                if req.uid in self._preempt:
+                    self._preempt.discard(req.uid)
+                    sub = gang.decoder.take_rows(st, [i], alloc_cache=False)
+                    req.preempted += 1
+                    self.paused.append((req, sub, gang.decoder))
+                    gang.requests[i] = None
+                    gang.emitted[i] = True
+                    # if the gang can't compact (dkv), stop the vacated
+                    # lane from driving further denoise steps — done
+                    # rows no longer extend the block loop, and no
+                    # other row reads this lane's state
+                    st.done[i] = True
+            open_rows = gang.open_rows()
+            if not open_rows:
+                if st.cache is not None:
+                    self.pool.release(st.batch, T, st.cache)
+                continue
+            if gang.decoder.batch_invariant:
+                new_b = _pow2_ge(len(open_rows)) if self.pad_pow2 \
+                    else len(open_rows)
+                if new_b < st.batch:
+                    rows = open_rows + [open_rows[0]] * \
+                        (new_b - len(open_rows))
+                    cache = None
+                    if gang.decoder.dcfg.method != "vanilla":
+                        cache = self.pool.acquire(new_b, T)
+                    new_state = gang.decoder.take_rows(st, rows, cache=cache)
+                    if st.cache is not None:
+                        self.pool.release(st.batch, T, st.cache)
+                    reqs = [gang.requests[i] for i in open_rows] \
+                        + [None] * (new_b - len(open_rows))
+                    ng = Gang(gang.decoder, new_state, reqs)
+                    kept.append(ng)
+                    continue
+            kept.append(gang)
+        self.gangs = kept

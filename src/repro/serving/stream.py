@@ -1,0 +1,80 @@
+"""Streaming output path: per-block callbacks and pull iterators.
+
+The scheduler emits ``BlockChunk``s at every block boundary; this
+module routes them. Two consumption styles:
+
+* callbacks — ``router.subscribe(uid, fn)`` (or ``uid=None`` for a
+  wildcard) fires ``fn(chunk)`` synchronously as chunks are published;
+* iterators — ``RequestStream`` buffers one request's chunks and is
+  drained by iterating while the engine ticks.
+
+Chunks for a given request always arrive in block order (the scheduler
+advances a request's gang one block per tick), so consumers can
+concatenate ``chunk.text`` pieces directly.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.serving.types import BlockChunk
+
+
+class StreamRouter:
+    def __init__(self):
+        self._subs: Dict[Optional[int], List[Callable[[BlockChunk], None]]] \
+            = defaultdict(list)
+
+    def subscribe(self, uid: Optional[int],
+                  fn: Callable[[BlockChunk], None]) -> None:
+        """``uid=None`` subscribes to every request's chunks."""
+        self._subs[uid].append(fn)
+
+    def unsubscribe(self, uid: Optional[int],
+                    fn: Callable[[BlockChunk], None]) -> None:
+        if fn in self._subs.get(uid, ()):
+            self._subs[uid].remove(fn)
+
+    def publish(self, chunks: List[BlockChunk]) -> None:
+        for chunk in chunks:
+            for fn in self._subs.get(chunk.uid, ()):
+                fn(chunk)
+            for fn in self._subs.get(None, ()):
+                fn(chunk)
+        # drop per-uid subscribers once their request finished
+        for chunk in chunks:
+            if chunk.finished and chunk.uid in self._subs:
+                del self._subs[chunk.uid]
+
+
+class RequestStream:
+    """Buffered per-request chunk stream. Fed by a router subscription;
+    drained with ``next()`` / iteration while the engine is stepped (the
+    engine's ``stream()`` drives ticking for you)."""
+
+    def __init__(self, router: StreamRouter, uid: int):
+        self.uid = uid
+        self._buf: Deque[BlockChunk] = deque()
+        self._finished = False
+        router.subscribe(uid, self._on_chunk)
+
+    def _on_chunk(self, chunk: BlockChunk) -> None:
+        self._buf.append(chunk)
+        self._finished |= chunk.finished
+
+    @property
+    def exhausted(self) -> bool:
+        return self._finished and not self._buf
+
+    def pop(self) -> Optional[BlockChunk]:
+        return self._buf.popleft() if self._buf else None
+
+    def drain(self) -> List[BlockChunk]:
+        out = list(self._buf)
+        self._buf.clear()
+        return out
+
+    @property
+    def text(self) -> str:
+        raise AttributeError("RequestStream buffers chunks; join "
+                             "chunk.text pieces as you drain them")

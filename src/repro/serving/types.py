@@ -1,0 +1,65 @@
+"""Request/response records shared across the serving subsystem."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.decoder import round_up_blocks  # re-export; single def
+
+__all__ = ["ServeRequest", "BlockChunk", "Completion", "round_up_blocks"]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One queued generation request plus its lifecycle timestamps."""
+    uid: int
+    prompt_tokens: np.ndarray          # (P,) int32
+    gen_len: int                       # rounded up to a block multiple
+    max_tokens: int
+    submit_time: float
+    admit_time: float = -1.0
+    first_block_time: float = -1.0     # TTFB anchor
+    finish_time: float = -1.0
+    nfe: int = 0                       # batch steps while this row was live
+    blocks_decoded: int = 0
+    preempted: int = 0                 # times kicked back to the queue
+
+    @property
+    def bucket(self):
+        """Shape bucket: requests sharing it can decode in one batch."""
+        return (int(self.prompt_tokens.shape[0]), self.gen_len)
+
+
+@dataclasses.dataclass
+class BlockChunk:
+    """One streamed block of committed tokens for a request. ``tokens``
+    are the raw block tokens (may extend past EOS); ``text`` is the
+    EOS-truncated decoded piece. ``finished`` marks the request's last
+    chunk."""
+    uid: int
+    block_idx: int
+    tokens: np.ndarray
+    text: str
+    finished: bool
+    eos: bool                          # this block decoded an EOS
+
+
+@dataclasses.dataclass
+class Completion:
+    """Terminal record for a request (superset of the legacy
+    ``repro.core.engine.Completion`` field names)."""
+    uid: int
+    text: str
+    tokens: np.ndarray                 # (gen_len,) EOS-truncated
+    latency_s: float                   # submit -> finish
+    nfe: int
+    ttfb_s: float = 0.0                # submit -> first block committed
+    queue_s: float = 0.0               # submit -> admitted to a slot
+    n_tokens: int = 0                  # non-EOS tokens generated
+    n_blocks: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.n_tokens / max(self.latency_s, 1e-9)

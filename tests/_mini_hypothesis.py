@@ -1,0 +1,160 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The test image doesn't ship hypothesis and the repo must not install
+packages, so importing this module registers a minimal shim under
+``sys.modules['hypothesis']`` implementing exactly the subset this
+suite uses: ``@given`` / ``@settings`` and the strategies ``floats``,
+``integers``, ``booleans``, ``lists``, ``just``, ``one_of`` and
+``data``. Examples are drawn from a per-test fixed-seed RNG (stable
+across runs — no hash salting), endpoints are sampled with elevated
+probability, and a failing example is attached to the assertion error.
+There is no shrinking. When the real hypothesis is available, conftest
+never imports this file.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 30
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng):
+        return self._draw_fn(rng)
+
+
+def floats(min_value=0.0, max_value=1.0):
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return float(min_value + (max_value - min_value) * rng.random())
+    return Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def just(value):
+    return Strategy(lambda rng: value)
+
+
+def one_of(*strategies):
+    return Strategy(
+        lambda rng: strategies[int(rng.integers(0, len(strategies)))].draw(rng))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+class _Data:
+    """Interactive draw object handed to tests that take ``st.data()``."""
+
+    def __init__(self, rng):
+        self._rng = rng
+        self.drawn = []
+
+    def draw(self, strategy, label=None):
+        v = strategy.draw(self._rng)
+        self.drawn.append(v)
+        return v
+
+
+def data():
+    return Strategy(lambda rng: _Data(rng))
+
+
+def given(*gargs, **gkwargs):
+    if gkwargs:
+        raise NotImplementedError("mini-hypothesis supports positional "
+                                  "strategies only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_hyp_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode()) & 0xFFFFFFFF
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                example = [s.draw(rng) for s in gargs]
+                try:
+                    fn(*args, *example, **kwargs)
+                except AssertionError as e:
+                    shown = [v.drawn if isinstance(v, _Data) else v
+                             for v in example]
+                    raise AssertionError(
+                        f"mini-hypothesis falsifying example #{i}: "
+                        f"{shown!r}\n{e}") from e
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # pytest must not see the strategy parameters as fixtures: hide
+        # the wrapped signature (examples are supplied by the wrapper).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorate
+
+
+class settings:
+    """Accepts and mostly ignores hypothesis settings; ``max_examples``
+    is honoured. Usable both as ``@settings(...)`` and via the
+    register/load profile classmethods conftest calls."""
+
+    _profiles = {}
+
+    def __init__(self, deadline=None, max_examples=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples is not None:
+            fn._mini_hyp_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        prof = cls._profiles.get(name, {})
+        if prof.get("max_examples"):
+            global DEFAULT_MAX_EXAMPLES
+            DEFAULT_MAX_EXAMPLES = prof["max_examples"]
+
+
+def _register():
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.__version__ = "0.0-mini-shim"
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "booleans", "just", "one_of",
+                 "lists", "data"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_register()
