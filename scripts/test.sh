@@ -3,6 +3,8 @@
 #
 #   scripts/test.sh              # full pytest suite (tier-1 command)
 #   scripts/test.sh smoke        # fast serving smoke: both engine modes
+#   scripts/test.sh kernels      # kernel-parity + fused-loop tests and a
+#                                # Pallas-routed continuous-serve smoke
 #   scripts/test.sh all          # suite + smoke
 #
 # Tests run on the single real CPU device; the dry-run subprocesses set
@@ -28,9 +30,21 @@ run_smoke() {
     done
 }
 
+run_kernels() {
+    # kernel-parity sweeps + fused-loop identity tests, then a fused
+    # continuous-serve smoke with attention/confidence routed through
+    # the Pallas kernels (interpret mode on CPU; real lowering on TPU
+    # with REPRO_PALLAS_INTERPRET=0)
+    python -m pytest -x -q tests/test_kernels.py tests/test_fused_decode.py
+    echo "== smoke: repro.launch.serve --mode continuous --use-kernels =="
+    python -m repro.launch.serve --arch tiny --n 4 --mode continuous \
+        --train-steps 120 --max-slots 4 --use-kernels
+}
+
 case "${1:-suite}" in
-    smoke) run_smoke ;;
-    all)   run_suite; run_smoke ;;
-    suite) run_suite ;;
-    *)     run_suite "$@" ;;
+    smoke)   run_smoke ;;
+    kernels) run_kernels ;;
+    all)     run_suite; run_smoke ;;
+    suite)   run_suite ;;
+    *)       run_suite "$@" ;;
 esac

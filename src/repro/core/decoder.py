@@ -16,15 +16,31 @@ Five methods (paper Tables 1/2/8):
               (window w + trailing position token) + dynamic threshold
               tau(t) (Eq. 10) + EOS early exit.
 
-The per-step compute is a single jitted function; Python drives blocks /
-steps (vLLM-style host scheduler). Query shapes are exact per block, so
-the jit cache holds at most #distinct-shapes entries.
+Two execution paths for the per-block denoise loop:
+
+  fused (default) — one jitted, device-resident loop per block: a
+      ``lax.while_loop`` carries the token buffer / commit mask / step
+      counter on device, with the mask-token ban, confidence, the
+      dynamic threshold tau(t), token selection, the straggler finalize
+      and EOS early exit all inside the compiled function. The host
+      syncs exactly once per block. For the parallel methods the block
+      confidence comes from a fused hidden-states -> (confidence, token)
+      head path (``apply_model(skip_head=True)`` + row-chunked
+      projection), so block logits never materialize as one
+      ``(B, K, V)`` array.
+  host — the legacy loop: Python drives every denoise step, fetching
+      per-step results to numpy and re-uploading the token buffer. Kept
+      as the validation oracle (``tests/test_fused_decode.py`` asserts
+      token identity) and as the baseline ``benchmarks/bench_decode.py``
+      measures against.
+
+Query shapes are exact per block, so the jit cache holds at most
+#distinct-(block, batch)-shapes entries in either path.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
@@ -33,6 +49,7 @@ import numpy as np
 
 from repro.core import schedule as sched
 from repro.core.suffix import suffix_query_region
+from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 from repro.models.model import apply_model, cache_take_rows, init_cache
 
@@ -58,6 +75,9 @@ class DecodeConfig:
     trailing_position: bool = True
     early_exit: bool = True
     use_kernels: bool = False      # route attention/confidence to Pallas
+    fused: bool = True             # device-resident denoise loop (one host
+                                   # sync per block); False = legacy host
+                                   # loop (per-step transfers)
     # Beyond-paper (EXPERIMENTS.md §Perf HC1): freeze the pruned-suffix
     # KV at the block-refresh step and reuse it across the block's
     # denoise iterations (DualCache-inspired). Steps then query only the
@@ -104,6 +124,8 @@ class DecodeState:
     kv_tokens: int = 0
     steps_per_block: list = dataclasses.field(default_factory=list)
     early_exits: int = 0
+    host_syncs: int = 0               # blocking device->host fetch points
+    logit_syncs: int = 0              # of those, full (B, K, V) logit copies
     prefill_time: float = 0.0
     decode_time: float = 0.0
 
@@ -134,6 +156,8 @@ class GenerateResult:
     tokens_generated: int          # non-EOS tokens (paper's TPS metric)
     early_exits: int
     prefill_time: float = 0.0
+    host_syncs: int = 0
+    logit_syncs: int = 0
 
     @property
     def tokens_per_nfe(self) -> float:
@@ -141,7 +165,8 @@ class GenerateResult:
 
 
 class DiffusionDecoder:
-    """Host-driven block diffusion decoder over one compiled step fn."""
+    """Block diffusion decoder: host scheduler over compiled step fns
+    (legacy) or one compiled device-resident loop per block (fused)."""
 
     def __init__(self, cfg: ModelConfig, params, dcfg: DecodeConfig,
                  mesh=None, data_axes=("data",)):
@@ -152,20 +177,48 @@ class DiffusionDecoder:
         self.data_axes = data_axes
         self._fns: Dict[Any, Any] = {}
 
+    # ------------------------------------------------------ shared pieces
+
+    def _head(self, p):
+        return p["embed"].T if self.cfg.tie_embeddings else p["lm_head"]
+
+    def _conf_from_hidden(self, p, h_blk):
+        """Fused head path (parallel methods): hidden (B, K, d) ->
+        (conf (B, K), toks (B, K)) without a monolithic (B, K, V)
+        logits array. Kernel route when use_kernels."""
+        cfg = self.cfg
+        if self.dcfg.use_kernels:
+            return kops.head_confidence_argmax(
+                h_blk, self._head(p), mask_id=cfg.mask_token_id,
+                logit_softcap=cfg.logit_softcap)
+        return sched.head_confidence_and_tokens(
+            h_blk, self._head(p), mask_id=cfg.mask_token_id,
+            logit_softcap=cfg.logit_softcap)
+
+    def _conf_from_logits(self, blk_logits):
+        """Full-vocab path (fixed-schedule methods): ban [MASK], Eq. 4."""
+        blk = blk_logits.astype(jnp.float32)
+        blk = blk.at[..., self.cfg.mask_token_id].set(-1e30)
+        return sched.confidence_and_tokens(blk)
+
     # ------------------------------------------------------ jitted steps
 
     def _encode_fn(self):
         if "encode" not in self._fns:
+            uk = self.dcfg.use_kernels
             self._fns["encode"] = jax.jit(
                 lambda p, toks, pos: apply_model(
-                    self.cfg, p, tokens=toks, positions=pos).logits)
+                    self.cfg, p, tokens=toks, positions=pos,
+                    use_kernels=uk).logits)
         return self._fns["encode"]
 
     def _prefill_fn(self):
         if "prefill" not in self._fns:
+            uk = self.dcfg.use_kernels
+
             def f(p, toks, pos, cache):
                 out = apply_model(self.cfg, p, tokens=toks, positions=pos,
-                                  mode="encode", cache=cache)
+                                  mode="encode", cache=cache, use_kernels=uk)
                 return out.cache, out.kv_valid
             self._fns["prefill"] = jax.jit(f)
         return self._fns["prefill"]
@@ -178,59 +231,102 @@ class DiffusionDecoder:
         training distribution — a prompt-only prefill does not (it
         measurably degrades small models; see tests/test_decoder.py)."""
         if "refresh" not in self._fns:
+            uk = self.dcfg.use_kernels
+
             def f(p, toks, pos, cache, *, upto):
                 out = apply_model(self.cfg, p, tokens=toks, positions=pos,
                                   mode="encode", cache=cache,
-                                  cache_upto=upto)
+                                  cache_upto=upto, use_kernels=uk)
                 return out.logits, out.cache
             self._fns["refresh"] = jax.jit(f, static_argnames=("upto",))
         return self._fns["refresh"]
 
+    def _refresh_ct_fn(self):
+        """Parallel-method refresh: same pass, but skip_head + the fused
+        head path so only (conf, toks) for the block leave the jit."""
+        if "refresh_ct" not in self._fns:
+            uk, K = self.dcfg.use_kernels, self.dcfg.block_size
+
+            def f(p, toks, pos, cache, *, upto):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="encode", cache=cache,
+                                  cache_upto=upto, skip_head=True,
+                                  use_kernels=uk)
+                c, t = self._conf_from_hidden(p, out.logits[:, upto:upto + K])
+                return c, t, out.cache
+            self._fns["refresh_ct"] = jax.jit(f, static_argnames=("upto",))
+        return self._fns["refresh_ct"]
+
     def _step_fn(self):
-        key = "step"
-        if key not in self._fns:
+        if "step" not in self._fns:
+            uk = self.dcfg.use_kernels
+
             def f(p, toks, pos, cache, kv_valid):
                 out = apply_model(self.cfg, p, tokens=toks, positions=pos,
                                   mode="step", cache=cache, kv_valid=kv_valid,
-                                  mesh=self.mesh, data_axes=self.data_axes)
+                                  mesh=self.mesh, data_axes=self.data_axes,
+                                  use_kernels=uk)
                 return out.logits
-            self._fns[key] = jax.jit(f)
-        return self._fns[key]
+            self._fns["step"] = jax.jit(f)
+        return self._fns["step"]
+
+    def _step_ct_fn(self):
+        if "step_ct" not in self._fns:
+            uk, K = self.dcfg.use_kernels, self.dcfg.block_size
+
+            def f(p, toks, pos, cache, kv_valid):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="step", cache=cache, kv_valid=kv_valid,
+                                  mesh=self.mesh, data_axes=self.data_axes,
+                                  skip_head=True, use_kernels=uk)
+                return self._conf_from_hidden(p, out.logits[:, :K])
+            self._fns["step_ct"] = jax.jit(f)
+        return self._fns["step_ct"]
 
     def _append_fn(self):
         if "append" not in self._fns:
+            uk = self.dcfg.use_kernels
+
             def f(p, toks, pos, cache, kv_valid):
                 out = apply_model(self.cfg, p, tokens=toks, positions=pos,
                                   mode="append", cache=cache,
-                                  kv_valid=kv_valid)
+                                  kv_valid=kv_valid, use_kernels=uk)
                 return out.cache, out.kv_valid
             self._fns["append"] = jax.jit(f)
         return self._fns["append"]
 
-    def _frozen_refresh_fn(self):
-        """HC1 (frozen suffix): block-start pass over [prefix || query]
-        that writes ALL KV position-indexed into a T-sized buffer —
-        including the pruned-suffix and trailing mask tokens — so steps
-        can attend to frozen suffix KV and query only the block."""
-        if "frozen_refresh" not in self._fns:
+    def _frozen_refresh_ct_fn(self):
+        """HC1 (frozen suffix, parallel methods only): block-start pass
+        over [prefix || query] that writes ALL KV position-indexed into
+        a T-sized buffer — including the pruned-suffix and trailing mask
+        tokens — so steps can attend to frozen suffix KV and query only
+        the block."""
+        if "frozen_refresh_ct" not in self._fns:
+            uk, K = self.dcfg.use_kernels, self.dcfg.block_size
+
             def f(p, toks, pos, cache, *, upto):
                 B = toks.shape[0]
                 out = apply_model(self.cfg, p, tokens=toks, positions=pos,
                                   mode="append", cache=cache,
                                   kv_valid=jnp.zeros((B,), jnp.int32),
                                   append_at=pos,
-                                  cache_positions=None, cache_upto=upto)
-                return out.logits, out.cache
-            self._fns["frozen_refresh"] = jax.jit(f, static_argnames=("upto",))
-        return self._fns["frozen_refresh"]
+                                  cache_positions=None, cache_upto=upto,
+                                  skip_head=True, use_kernels=uk)
+                c, t = self._conf_from_hidden(p, out.logits[:, upto:upto + K])
+                return c, t, out.cache
+            self._fns["frozen_refresh_ct"] = jax.jit(
+                f, static_argnames=("upto",))
+        return self._fns["frozen_refresh_ct"]
 
     def _dkv_step_fn(self):
         if "dkv" not in self._fns:
+            uk = self.dcfg.use_kernels
+
             def f(p, toks, pos, cache, valid_mask, mix):
                 out = apply_model(self.cfg, p, tokens=toks, positions=pos,
                                   mode="append", cache=cache,
                                   kv_valid=valid_mask, append_at=pos,
-                                  self_kv_mix=mix)
+                                  self_kv_mix=mix, use_kernels=uk)
                 return out.logits, out.cache
             self._fns["dkv"] = jax.jit(f)
         return self._fns["dkv"]
@@ -304,6 +400,7 @@ class DiffusionDecoder:
             jax.block_until_ready(jax.tree.leaves(state.cache)[0])
             state.prefill_time = time.perf_counter() - tp0
             state.nfe += 1
+            state.host_syncs += 1
             state.q_tokens += B * T
             state.kv_tokens += B * T * T
             state.valid_mask = np.zeros((B, T), bool)
@@ -356,16 +453,306 @@ class DiffusionDecoder:
         """Run the full denoise loop for ``state.block_idx`` and advance
         to the next block boundary (mutates and returns ``state``).
         No-op on a finished state."""
-        cfg, d = self.cfg, self.dcfg
         if state.finished:
             return state
+        if self.dcfg.fused:
+            return self._decode_block_fused(state)
+        return self._decode_block_host(state)
+
+    def _query_region(self, state: DecodeState):
+        d = self.dcfg
+        region = suffix_query_region(
+            gen_start=state.prompt_len, gen_len=d.gen_len,
+            block_size=d.block_size, block_idx=state.block_idx,
+            window=d.effective_window if d.trailing_position
+            else max(d.effective_window, 0))
+        qpos = region.positions                       # (Sq,)
+        if not d.trailing_position and region.trailing_pos >= 0:
+            qpos = qpos[:-1]
+        return region, qpos
+
+    # ------------------------------------------------- fused device loop
+
+    def _fused_fn(self):
+        """The device-resident per-block denoise loop: refresh (where the
+        method has one) + a ``lax.while_loop`` over denoise steps +
+        straggler finalize + EOS early exit, compiled as ONE function.
+        Specialized per (method, shapes, bstart); the host calls it once
+        per block and syncs once on its outputs."""
+        if "fused" in self._fns:
+            return self._fns["fused"]
+        cfg, d = self.cfg, self.dcfg
+        eos_id = cfg.eos_token_id   # the [MASK] ban lives in _conf_from_*
+        K = d.block_size
+        steps_cap = d.steps_per_block or K
+        n_commit = max(1, K // steps_cap)
+        uk = d.use_kernels
+        parallel = d.parallel
+        frozen = d.frozen_suffix and parallel
+
+        def commit_tokens(x, committed, conf, toks, bstart):
+            """Eq. 9/fixed-rate selection + token write for one step.
+            Mirrors the host loop exactly (all rows participate; only
+            the loop CONDITION excludes early-exited rows)."""
+            B = x.shape[0]
+            blk_committed = committed[:, bstart:bstart + K]
+            blk_masked = ~blk_committed
+            if parallel:
+                if d.method == "streaming":
+                    r_mask = jnp.mean(blk_masked.astype(jnp.float32), axis=1)
+                    tau = sched.dynamic_threshold(d.tau0, d.alpha, r_mask)
+                else:
+                    tau = jnp.full((B,), d.tau0, jnp.float32)
+                commit = sched.select_tokens(conf, blk_masked, tau)
+            else:
+                commit = sched.fixed_rate_select(conf, blk_masked, n_commit)
+            new_blk = jnp.where(commit, toks, x[:, bstart:bstart + K])
+            x = x.at[:, bstart:bstart + K].set(new_blk)
+            committed = committed.at[:, bstart:bstart + K].set(
+                blk_committed | commit)
+            return x, committed
+
+        def f(p, x, committed, done, cache, qpos_b, valid_mask, cached_mask,
+              *, bstart):
+            B, T = x.shape
+            prefix_len = bstart
+            vsums = jnp.zeros((steps_cap,), jnp.int32)  # dkv kv-size trace
+
+            def loop_open(committed, step):
+                blk_masked = ~committed[:, bstart:bstart + K]
+                return ((step < steps_cap)
+                        & jnp.any(blk_masked & ~done[:, None]))
+
+            if d.method == "vanilla":
+                pos_T = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+                def cond(c):
+                    _, committed, step, _ = c
+                    return loop_open(committed, step)
+
+                def body(c):
+                    x, committed, step, _ = c
+                    out = apply_model(cfg, p, tokens=x, positions=pos_T,
+                                      use_kernels=uk)
+                    conf, toks = self._conf_from_logits(
+                        out.logits[:, bstart:bstart + K])
+                    x, committed = commit_tokens(x, committed, conf, toks,
+                                                 bstart)
+                    return (x, committed, step + 1, toks)
+
+                init = (x, committed, jnp.int32(0),
+                        jnp.zeros((B, K), jnp.int32))
+                x, committed, steps, toks = jax.lax.while_loop(
+                    cond, body, init)
+
+            elif d.method == "dkv":
+                def cond(c):
+                    _, committed, step = c[0], c[1], c[2]
+                    return loop_open(committed, step)
+
+                def body(c):
+                    x, committed, step, _, cache, valid_mask, cached_mask, \
+                        vsums = c
+                    q_toks = jnp.take_along_axis(x, qpos_b, axis=1)
+                    mix = jnp.take_along_axis(cached_mask, qpos_b, axis=1)
+                    out = apply_model(cfg, p, tokens=q_toks,
+                                      positions=qpos_b, mode="append",
+                                      cache=cache, kv_valid=valid_mask,
+                                      append_at=qpos_b, self_kv_mix=mix,
+                                      use_kernels=uk)
+                    conf, toks = self._conf_from_logits(out.logits[:, :K])
+                    # tokens committed earlier (whose fresh KV this step
+                    # was decoded-input based) are now frozen
+                    newly = committed & ~cached_mask
+                    cached_mask = cached_mask | newly
+                    valid_mask = valid_mask | newly
+                    vsums = vsums.at[step].set(
+                        jnp.sum(valid_mask.astype(jnp.int32)) // B)
+                    x, committed = commit_tokens(x, committed, conf, toks,
+                                                 bstart)
+                    return (x, committed, step + 1, toks, out.cache,
+                            valid_mask, cached_mask, vsums)
+
+                init = (x, committed, jnp.int32(0),
+                        jnp.zeros((B, K), jnp.int32), cache,
+                        valid_mask, cached_mask, vsums)
+                (x, committed, steps, toks, cache, valid_mask, cached_mask,
+                 vsums) = jax.lax.while_loop(cond, body, init)
+
+            else:
+                # prefix / fast / streaming: block-start refresh (paper
+                # §3.3) outside the loop — it has a different query shape
+                # and is the only step that writes the cache
+                pref_pos = jnp.broadcast_to(
+                    jnp.arange(prefix_len, dtype=jnp.int32)[None],
+                    (B, prefix_len))
+                full_pos = jnp.concatenate([pref_pos, qpos_b], axis=1)
+                full_toks = jnp.take_along_axis(x, full_pos, axis=1)
+                if frozen:
+                    out = apply_model(cfg, p, tokens=full_toks,
+                                      positions=full_pos, mode="append",
+                                      cache=cache,
+                                      kv_valid=jnp.zeros((B,), jnp.int32),
+                                      append_at=full_pos,
+                                      cache_upto=prefix_len, skip_head=True,
+                                      use_kernels=uk)
+                    valid = jnp.broadcast_to(
+                        jnp.arange(T) < prefix_len, (B, T))
+                    valid = valid.at[jnp.arange(B)[:, None],
+                                     qpos_b[:, K:]].set(True)
+                else:
+                    out = apply_model(cfg, p, tokens=full_toks,
+                                      positions=full_pos, mode="encode",
+                                      cache=cache, cache_upto=prefix_len,
+                                      skip_head=parallel, use_kernels=uk)
+                    valid = jnp.full((B,), prefix_len, jnp.int32)
+                cache = out.cache
+                blk_out = out.logits[:, prefix_len:prefix_len + K]
+                if parallel:
+                    conf, toks = self._conf_from_hidden(p, blk_out)
+                else:
+                    conf, toks = self._conf_from_logits(blk_out)
+                x, committed = commit_tokens(x, committed, conf, toks,
+                                             bstart)
+
+                if frozen:
+                    bpos = jnp.broadcast_to(
+                        jnp.arange(bstart, bstart + K,
+                                   dtype=jnp.int32)[None], (B, K))
+
+                def cond(c):
+                    _, committed, step, _ = c
+                    return loop_open(committed, step)
+
+                def body(c):
+                    x, committed, step, _ = c
+                    if frozen:
+                        out = apply_model(cfg, p,
+                                          tokens=x[:, bstart:bstart + K],
+                                          positions=bpos, mode="step",
+                                          cache=cache, kv_valid=valid,
+                                          mesh=self.mesh,
+                                          data_axes=self.data_axes,
+                                          skip_head=True, use_kernels=uk)
+                    else:
+                        q_toks = jnp.take_along_axis(x, qpos_b, axis=1)
+                        out = apply_model(cfg, p, tokens=q_toks,
+                                          positions=qpos_b, mode="step",
+                                          cache=cache, kv_valid=valid,
+                                          mesh=self.mesh,
+                                          data_axes=self.data_axes,
+                                          skip_head=parallel,
+                                          use_kernels=uk)
+                    if parallel:
+                        conf, toks = self._conf_from_hidden(
+                            p, out.logits[:, :K])
+                    else:
+                        conf, toks = self._conf_from_logits(
+                            out.logits[:, :K])
+                    x, committed = commit_tokens(x, committed, conf, toks,
+                                                 bstart)
+                    return (x, committed, step + 1, toks)
+
+                init = (x, committed, jnp.int32(1), toks)
+                x, committed, steps, toks = jax.lax.while_loop(
+                    cond, body, init)
+
+            # straggler finalize (steps cap reached): commit the last
+            # step's argmax — but never overwrite rows that early-exited
+            # in a prior block (their tail is EOS-truncated territory)
+            blk = x[:, bstart:bstart + K]
+            blk_masked = ~committed[:, bstart:bstart + K]
+            fill = blk_masked & ~done[:, None] & (steps > 0)
+            blk = jnp.where(fill, toks, blk)
+            x = x.at[:, bstart:bstart + K].set(blk)
+            committed = committed.at[:, bstart:bstart + K].set(True)
+            # Early exit (paper §3.3): a block that decoded an EOS makes
+            # all *subsequent* blocks skippable for that row.
+            if d.early_exit:
+                hit = jnp.any(blk == eos_id, axis=1) & ~done
+                n_hit = jnp.sum(hit.astype(jnp.int32))
+                done = done | hit
+            else:
+                n_hit = jnp.int32(0)
+            return (x, committed, done, steps, n_hit, cache,
+                    valid_mask, cached_mask, vsums)
+
+        self._fns["fused"] = jax.jit(f, static_argnames=("bstart",))
+        return self._fns["fused"]
+
+    def _decode_block_fused(self, state: DecodeState) -> DecodeState:
+        d = self.dcfg
+        t_block = time.perf_counter()
+        B, P = state.batch, state.prompt_len
+        K = d.block_size
+        T = P + d.gen_len
+        steps_cap = d.steps_per_block or K
+        frozen = d.frozen_suffix and d.parallel
+
+        region, qpos = self._query_region(state)
+        Sq = len(qpos)
+        qpos_b = np.broadcast_to(qpos[None], (B, Sq)).copy()
+        bstart = region.block_start
+        prefix_len = bstart
+
+        vm = None if state.valid_mask is None else jnp.asarray(state.valid_mask)
+        cm = None if state.cached_mask is None \
+            else jnp.asarray(state.cached_mask)
+        (x, committed, done, steps, n_hit, cache, vm, cm,
+         vsums) = self._fused_fn()(
+            self.params, jnp.asarray(state.x), jnp.asarray(state.committed),
+            jnp.asarray(state.done), state.cache, jnp.asarray(qpos_b),
+            vm, cm, bstart=bstart)
+
+        # the ONE host sync for this block (np.array: writable copies —
+        # the scheduler and finalize mutate these buffers in place)
+        state.x = np.array(x)
+        state.committed = np.array(committed)
+        state.done = np.array(done)
+        steps = int(steps)
+        state.early_exits += int(n_hit)
+        state.host_syncs += 1
+        state.cache = cache
+        if vm is not None:
+            state.valid_mask = np.array(vm)
+            state.cached_mask = np.array(cm)
+
+        state.steps_per_block.append(steps)
+        state.nfe += steps
+        if d.method == "vanilla":
+            state.q_tokens += steps * B * T
+            state.kv_tokens += steps * B * T * T
+        elif d.method == "dkv":
+            state.q_tokens += steps * B * Sq
+            for vs in np.asarray(vsums)[:steps]:
+                state.kv_tokens += B * Sq * (int(vs) + Sq)
+        elif steps > 0:
+            state.q_tokens += B * (prefix_len + Sq)
+            state.kv_tokens += B * (prefix_len + Sq) ** 2
+            if frozen:
+                state.q_tokens += (steps - 1) * B * K
+                state.kv_tokens += (steps - 1) * B * K * (prefix_len + Sq + K)
+            else:
+                state.q_tokens += (steps - 1) * B * Sq
+                state.kv_tokens += (steps - 1) * B * Sq * (prefix_len + Sq)
+        state.block_idx = region.block_idx + 1
+        state.decode_time += time.perf_counter() - t_block
+        return state
+
+    # --------------------------------------------------- legacy host loop
+
+    def _decode_block_host(self, state: DecodeState) -> DecodeState:
+        """The per-step host loop: every denoise step round-trips
+        device->host (confidence/selection in numpy) and re-uploads the
+        token buffer. Validation oracle for the fused loop."""
+        cfg, d = self.cfg, self.dcfg
         t_block = time.perf_counter()
         B, P = state.batch, state.prompt_len
         L, K = d.gen_len, d.block_size
         T = P + L
         steps_cap = d.steps_per_block or K
-        mask_id, eos_id = cfg.mask_token_id, cfg.eos_token_id
-        frozen = d.frozen_suffix and d.method in ("fast", "streaming")
+        eos_id = cfg.eos_token_id
+        frozen = d.frozen_suffix and d.parallel
 
         x, committed, done = state.x, state.committed, state.done
         cache = state.cache
@@ -374,13 +761,7 @@ class DiffusionDecoder:
         nfe = q_tokens = kv_tokens = 0
 
         c = state.block_idx
-        region = suffix_query_region(
-            gen_start=P, gen_len=L, block_size=K, block_idx=c,
-            window=d.effective_window if d.trailing_position
-            else max(d.effective_window, 0))
-        qpos = region.positions                       # (Sq,)
-        if not d.trailing_position and region.trailing_pos >= 0:
-            qpos = qpos[:-1]
+        region, qpos = self._query_region(state)
         Sq = len(qpos)
         qpos_b = np.broadcast_to(qpos[None], (B, Sq)).copy()
         bstart, bend = region.block_start, region.block_start + K
@@ -395,7 +776,7 @@ class DiffusionDecoder:
             step += 1
             nfe += 1
 
-            q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
+            conf_toks = None            # parallel methods: (conf, toks)
             if d.method == "vanilla":
                 q_tokens += B * T
                 logits = self._encode_fn()(
@@ -405,6 +786,7 @@ class DiffusionDecoder:
                 kv_tokens += B * T * T
             elif d.method == "dkv":
                 q_tokens += B * Sq
+                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
                 mix = jnp.asarray(
                     cached_mask[np.arange(B)[:, None], qpos_b])
                 logits, cache = self._dkv_step_fn()(
@@ -429,49 +811,76 @@ class DiffusionDecoder:
                 full_toks = jnp.asarray(
                     x[np.arange(B)[:, None], full_pos])
                 if frozen:
-                    logits, cache = self._frozen_refresh_fn()(
+                    cf, tk, cache = self._frozen_refresh_ct_fn()(
                         self.params, full_toks, jnp.asarray(full_pos),
                         cache, upto=prefix_len)
+                    conf_toks = (cf, tk)
                     vb = np.zeros((B, T), bool)
                     vb[:, :prefix_len] = True
                     for pp in qpos[K:]:
                         vb[:, pp] = True
                     valid = jnp.asarray(vb)
+                elif d.parallel:
+                    cf, tk, cache = self._refresh_ct_fn()(
+                        self.params, full_toks, jnp.asarray(full_pos),
+                        cache, upto=prefix_len)
+                    conf_toks = (cf, tk)
+                    valid = jnp.full((B,), prefix_len, jnp.int32)
                 else:
                     logits, cache = self._refresh_fn()(
                         self.params, full_toks, jnp.asarray(full_pos),
                         cache, upto=prefix_len)
+                    blk_logits = logits[:, prefix_len:prefix_len + K]
                     valid = jnp.full((B,), prefix_len, jnp.int32)
-                blk_logits = logits[:, prefix_len:prefix_len + K]
                 kv_tokens += B * (prefix_len + Sq) ** 2
             elif frozen:
                 q_tokens += B * K
                 bpos = np.broadcast_to(
                     np.arange(bstart, bend, dtype=np.int32)[None], (B, K))
-                logits = self._step_fn()(
+                conf_toks = self._step_ct_fn()(
                     self.params, jnp.asarray(x[:, bstart:bend]),
                     jnp.asarray(bpos), cache, valid)
-                blk_logits = logits[:, :K]
                 kv_tokens += B * K * (prefix_len + Sq + K)
+            elif d.parallel:
+                q_tokens += B * Sq
+                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
+                conf_toks = self._step_ct_fn()(
+                    self.params, q_toks, jnp.asarray(qpos_b), cache,
+                    valid)
+                kv_tokens += B * Sq * (prefix_len + Sq)
             else:
                 q_tokens += B * Sq
+                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
                 logits = self._step_fn()(
                     self.params, q_toks, jnp.asarray(qpos_b), cache,
                     valid)
                 blk_logits = logits[:, :K]
                 kv_tokens += B * Sq * (prefix_len + Sq)
 
-            blk_np = np.array(blk_logits, np.float32)
-            blk_np[..., mask_id] = -1e30  # LLaDA: never emit [MASK]
-            conf, toks = sched.confidence_and_tokens(blk_np)
-            conf, toks = np.asarray(conf), np.asarray(toks)
+            if conf_toks is not None:
+                # parallel methods: only (B, K) conf + tokens cross the
+                # host boundary (fused head path; no block logits)
+                conf = np.asarray(conf_toks[0])
+                toks = np.asarray(conf_toks[1])
+                state.host_syncs += 1
+            else:
+                # fixed-schedule methods: the full (B, K, V) block
+                # logits cross to the host every step — the transfer
+                # the fused loop eliminates
+                blk_np = np.array(blk_logits, np.float32)
+                state.host_syncs += 1
+                state.logit_syncs += 1
+                blk_np[..., cfg.mask_token_id] = -1e30  # never emit [MASK]
+                conf, toks = sched.confidence_and_tokens(blk_np)
+                conf, toks = np.asarray(conf), np.asarray(toks)
 
             if d.parallel:
                 if d.method == "streaming":
-                    r_mask = blk_masked.mean(axis=1)
-                    tau = sched.dynamic_threshold(d.tau0, d.alpha, r_mask)
+                    r_mask = blk_masked.mean(axis=1, dtype=np.float32)
+                    tau = np.asarray(sched.dynamic_threshold(
+                        d.tau0, d.alpha, jnp.asarray(r_mask)))
                 else:
-                    tau = np.full((B,), d.tau0)
+                    tau = np.full((B,), d.tau0, np.float32)
                 commit = np.array(sched.select_tokens(
                     jnp.asarray(conf), jnp.asarray(blk_masked),
                     jnp.asarray(tau)))
@@ -485,8 +894,9 @@ class DiffusionDecoder:
 
         state.steps_per_block.append(step)
 
-        # finalize block: commit any stragglers (steps cap reached)
-        blk_masked = ~committed[:, bstart:bend]
+        # finalize block: commit any stragglers (steps cap reached) —
+        # rows that early-exited in a prior block keep their tail
+        blk_masked = ~committed[:, bstart:bend] & ~done[:, None]
         if blk_masked.any() and toks is not None:
             x[:, bstart:bend] = np.where(blk_masked, toks, x[:, bstart:bend])
         committed[:, bstart:bend] = True
@@ -528,7 +938,8 @@ class DiffusionDecoder:
         return GenerateResult(gen, state.nfe, list(state.steps_per_block),
                               wall, state.q_tokens, state.kv_tokens,
                               tokens_generated, state.early_exits,
-                              state.prefill_time)
+                              state.prefill_time, state.host_syncs,
+                              state.logit_syncs)
 
     def generate(self, prompt: np.ndarray) -> GenerateResult:
         """Monolithic generation: prefill + every block to completion.

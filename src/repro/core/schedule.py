@@ -25,6 +25,49 @@ def confidence_and_tokens(logits: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray
     return conf, toks
 
 
+def chunked_head_reduce(hidden: jnp.ndarray, head: jnp.ndarray, reduce_fn, *,
+                        mask_id: int = -1, logit_softcap: float = 0.0,
+                        row_chunk: int = 1024
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-head scaffold: project row chunks of the final hidden
+    states through the LM head (softcap + [MASK] ban applied per chunk)
+    and hand each chunk's 2-D logits to ``reduce_fn`` -> (conf, tok),
+    so the full ``(..., V)`` logits never exist as one array. Shared by
+    the reference reducer below and the Pallas route in ``kernels.ops``
+    — the wrapper semantics must stay identical between them.
+
+    hidden: (..., d); head: (d, V).
+    """
+    shape = hidden.shape[:-1]
+    h2 = hidden.reshape(-1, hidden.shape[-1])
+    confs, toks = [], []
+    for s in range(0, h2.shape[0], row_chunk):
+        hc = h2[s:s + row_chunk]
+        logits = (hc @ head.astype(hc.dtype)).astype(jnp.float32)
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        if mask_id >= 0:
+            logits = logits.at[:, mask_id].set(-1e30)
+        c, t = reduce_fn(logits)
+        confs.append(c)
+        toks.append(t)
+    conf = confs[0] if len(confs) == 1 else jnp.concatenate(confs)
+    tok = toks[0] if len(toks) == 1 else jnp.concatenate(toks)
+    return conf.reshape(shape), tok.reshape(shape)
+
+
+def head_confidence_and_tokens(hidden: jnp.ndarray, head: jnp.ndarray, *,
+                               mask_id: int = -1, logit_softcap: float = 0.0,
+                               row_chunk: int = 1024
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused-head path (reference reducer): row chunking leaves each
+    row's reduction untouched, so per-row results match
+    ``confidence_and_tokens`` over the monolithic logits."""
+    return chunked_head_reduce(hidden, head, confidence_and_tokens,
+                               mask_id=mask_id, logit_softcap=logit_softcap,
+                               row_chunk=row_chunk)
+
+
 def dynamic_threshold(tau0: float, alpha: float, r_mask: jnp.ndarray) -> jnp.ndarray:
     """Eq. 10: tau(t) = tau0 * (1 - alpha * (1 - r_mask)).
 

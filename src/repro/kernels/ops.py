@@ -35,8 +35,31 @@ def sliding_window_attention(q, k, v, q_pos, kv_pos, *, window: int,
 
 
 def confidence_argmax(logits, **kw):
-    """logits: (..., V) -> (conf (...,), idx (...,))."""
-    shape = logits.shape[:-1]
+    """logits: (..., V) -> (conf (...,), idx (...,)).
+
+    2-D inputs (the fused-head path feeds row chunks) go straight to the
+    kernel — no intermediate full-vocab reshape of an array that is
+    already in kernel layout."""
     kw.setdefault("interpret", INTERPRET)
+    if logits.ndim == 2:
+        return _confidence_argmax(logits, **kw)
+    shape = logits.shape[:-1]
     conf, idx = _confidence_argmax(logits.reshape(-1, logits.shape[-1]), **kw)
     return conf.reshape(shape), idx.reshape(shape)
+
+
+def head_confidence_argmax(hidden, head, *, mask_id: int = -1,
+                           logit_softcap: float = 0.0,
+                           row_chunk: int = 1024, **kw):
+    """Fused LM-head projection + confidence/argmax (Eq. 4) without ever
+    materializing the full ``(..., V)`` logits in HBM.
+
+    hidden: (..., d) final hidden states (``apply_model(skip_head=True)``);
+    head: (d, V) projection. Rows are chunked so peak memory is
+    O(row_chunk x V); within each chunk the Pallas kernel streams vocab
+    tiles through VMEM. ``mask_id >= 0`` bans that token (LLaDA: never
+    emit [MASK]) inside the projected tile, before the reduction."""
+    from repro.core.schedule import chunked_head_reduce
+    return chunked_head_reduce(
+        hidden, head, lambda logits: confidence_argmax(logits, **kw),
+        mask_id=mask_id, logit_softcap=logit_softcap, row_chunk=row_chunk)

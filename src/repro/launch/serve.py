@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--train-steps", type=int, default=600)
     ap.add_argument("--stream", action="store_true",
                     help="print per-block chunks as they commit")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route attention/confidence through the Pallas "
+                         "kernels (REPRO_PALLAS_INTERPRET=0 on real TPU)")
+    ap.add_argument("--host-loop", action="store_true",
+                    help="legacy per-step host denoise loop instead of "
+                         "the fused device-resident loop")
     args = ap.parse_args()
 
     import jax
@@ -50,7 +56,8 @@ def main():
         params, _ = train(cfg, TrainConfig(steps=args.train_steps,
                                            batch_size=32, seq_len=44))
     d = DecodeConfig(method=args.method, gen_len=args.gen_len, block_size=8,
-                     window=args.window, tau0=args.tau0, alpha=args.alpha)
+                     window=args.window, tau0=args.tau0, alpha=args.alpha,
+                     use_kernels=args.use_kernels, fused=not args.host_loop)
     tok = ByteTokenizer(cfg.vocab_size)
     ds = ArithmeticDataset(tok, seq_len=44)
     samples = ds.eval_set(args.n)
@@ -78,6 +85,8 @@ def main():
               f"p99={snap['latency_p99_s']*1e3:.0f}ms "
               f"ttfb_p50={snap['ttfb_p50_s']*1e3:.0f}ms "
               f"occ={snap['mean_occupancy']:.2f} "
+              f"syncs/blk={snap['host_syncs_per_block']:.2f} "
+              f"steps/blk={snap['device_steps_per_block']:.2f} "
               f"jit_cache={eng.jit_cache_size()}")
         return
     eng = ServingEngine(cfg, params, d, mode="batch")

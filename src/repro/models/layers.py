@@ -183,12 +183,15 @@ def attend_ref(q, k, v, *, scale, attn_softcap=0.0, window=0,
 
 def apply_attention(cfg, p, x, *, q_pos, kv_pos=None, kv_cache=None,
                     kv_valid=None, window=0, return_kv=False,
-                    self_kv_override=None):
+                    self_kv_override=None, use_kernels=False):
     """GQA attention over [kv_cache || self].
 
     x: (B, Sq, d). kv_cache: optional (k, v) each (B, P, Hkv, D) with
     positions implicit in kv_pos (length P + Sq when cache present,
-    else Sq).
+    else Sq). ``use_kernels`` routes the attend to the Pallas
+    flash-style kernel (``kernels.ops.block_attention``) instead of the
+    chunked reference path — same GQA mapping, softcap, window, and KV
+    validity semantics.
     """
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
@@ -227,9 +230,17 @@ def apply_attention(cfg, p, x, *, q_pos, kv_pos=None, kv_cache=None,
                 idx = jnp.arange(P + Sq_self)[None, :]
                 kv_mask = (idx < kv_valid.reshape(-1, 1)) | (idx >= P)
     scale = cfg.attn_scale or (1.0 / math.sqrt(cfg.head_dim))
-    out = attend_ref(q, k, v, scale=scale, attn_softcap=cfg.attn_softcap,
-                     window=window, q_pos=q_pos, kv_pos=kv_pos,
-                     kv_mask=kv_mask)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        km = kv_mask if kv_mask is not None \
+            else jnp.ones((x.shape[0], k.shape[1]), jnp.bool_)
+        out = kops.block_attention(
+            q, k, v, q_pos, kv_pos, km, scale=scale,
+            softcap=cfg.attn_softcap, window=window).astype(q.dtype)
+    else:
+        out = attend_ref(q, k, v, scale=scale, attn_softcap=cfg.attn_softcap,
+                         window=window, q_pos=q_pos, kv_pos=kv_pos,
+                         kv_mask=kv_mask)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return (out, new_kv) if return_kv else out
 

@@ -176,7 +176,7 @@ def _write_kv_at(buf, new, idx):
 def apply_layer(cfg, p, spec: LayerSpec, x, *, q_pos, cache, kv_valid,
                 mode, cache_positions=None, append_at=None,
                 self_kv_mix=None, cache_upto=None, mesh=None,
-                data_axes=("data",)):
+                data_axes=("data",), use_kernels=False):
     """Returns (y, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
@@ -185,7 +185,8 @@ def apply_layer(cfg, p, spec: LayerSpec, x, *, q_pos, cache, kv_valid,
         window = cfg.local_window if spec.mixer == ATTN_LOCAL else 0
         if mode == "encode":
             out, kv = apply_attention(cfg, p["mixer"], h, q_pos=q_pos,
-                                      window=window, return_kv=True)
+                                      window=window, return_kv=True,
+                                      use_kernels=use_kernels)
             if cache is not None:
                 zero = jnp.zeros((x.shape[0],), jnp.int32)
                 new_cache = (_write_kv(cache[0], kv[0].astype(cache[0].dtype), zero),
@@ -205,7 +206,8 @@ def apply_layer(cfg, p, spec: LayerSpec, x, *, q_pos, cache, kv_valid,
                                       kv_pos=kv_pos, kv_cache=cache,
                                       kv_valid=kv_valid, window=window,
                                       return_kv=True,
-                                      self_kv_override=override)
+                                      self_kv_override=override,
+                                      use_kernels=use_kernels)
             if mode == "append":
                 if append_at is not None:
                     new_cache = (_write_kv_at(cache[0], kv[0].astype(cache[0].dtype), append_at),
@@ -272,8 +274,12 @@ def apply_model(cfg: ModelConfig, params, *, tokens=None, embeds=None,
                 kv_valid=None, cache_positions=None, append_at=None,
                 self_kv_mix=None, cache_upto=None, serve_long: bool = False,
                 mesh=None, data_axes=("data",),
-                skip_head: bool = False) -> ModelOutput:
-    """tokens: (B, S) int32 or embeds: (B, S, F|d). positions: (B, S)."""
+                skip_head: bool = False,
+                use_kernels: bool = False) -> ModelOutput:
+    """tokens: (B, S) int32 or embeds: (B, S, F|d). positions: (B, S).
+    ``use_kernels`` routes attention layers to the Pallas block kernel
+    (decode path; the reference path remains the training/autodiff
+    route)."""
     dtype = _dtype(cfg.dtype)
     if tokens is not None:
         x = params["embed"][tokens].astype(dtype)
@@ -324,7 +330,8 @@ def apply_model(cfg: ModelConfig, params, *, tokens=None, embeds=None,
                                    append_at=append_at,
                                    self_kv_mix=self_kv_mix,
                                    cache_upto=cache_upto, mesh=mesh,
-                                   data_axes=data_axes)
+                                   data_axes=data_axes,
+                                   use_kernels=use_kernels)
             if cfg.remat:
                 layer_fn = jax.checkpoint(layer_fn)
             xc, nc, a = layer_fn(p_i[pos], xc,
@@ -360,7 +367,8 @@ def apply_model(cfg: ModelConfig, params, *, tokens=None, embeds=None,
                                append_at=append_at,
                                self_kv_mix=self_kv_mix,
                                cache_upto=cache_upto, mesh=mesh,
-                               data_axes=data_axes)
+                               data_axes=data_axes,
+                               use_kernels=use_kernels)
         aux = aux + a
         new_tail.append(nc)
 

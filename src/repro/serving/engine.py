@@ -82,7 +82,8 @@ class ContinuousEngine:
             self.metrics.add_request(RequestMetrics(
                 uid=comp.uid, queue_s=comp.queue_s, ttfb_s=comp.ttfb_s,
                 latency_s=comp.latency_s, n_tokens=comp.n_tokens,
-                nfe=comp.nfe, n_blocks=comp.n_blocks))
+                nfe=comp.nfe, n_blocks=comp.n_blocks,
+                host_syncs=comp.host_syncs, logit_syncs=comp.logit_syncs))
             self.stats["requests"] += 1
             self.stats["tokens"] += comp.n_tokens
         if chunks or completions:

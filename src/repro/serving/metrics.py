@@ -22,6 +22,8 @@ class RequestMetrics:
     n_tokens: int
     nfe: int
     n_blocks: int
+    host_syncs: int = 0   # device->host sync points while the row was live
+    logit_syncs: int = 0  # ... of which were full (B, K, V) logit copies
 
 
 @dataclasses.dataclass
@@ -35,6 +37,8 @@ class ServeMetrics:
     wall_time_s: float = 0.0
     occupancy_weighted: float = 0.0    # sum(live/max_slots * tick_dt)
     total_nfe: int = 0
+    total_host_syncs: int = 0          # fused loop: ~1 per decoded block
+    total_logit_syncs: int = 0         # host loop: 1 per step (fixed-sched)
 
     def sample_tick(self, live_rows: int, tick_dt: float) -> None:
         self.ticks += 1
@@ -47,6 +51,8 @@ class ServeMetrics:
     def add_request(self, rm: RequestMetrics) -> None:
         self.requests.append(rm)
         self.total_nfe += rm.nfe
+        self.total_host_syncs += rm.host_syncs
+        self.total_logit_syncs += rm.logit_syncs
 
     # ------------------------------------------------------ aggregates
 
@@ -63,9 +69,14 @@ class ServeMetrics:
     def mean_occupancy(self) -> float:
         return self.occupancy_weighted / max(self.wall_time_s, 1e-9)
 
+    @property
+    def total_blocks(self) -> int:
+        return sum(r.n_blocks for r in self.requests)
+
     def snapshot(self) -> Dict:
         lat = [r.latency_s for r in self.requests]
         ttfb = [r.ttfb_s for r in self.requests]
+        blocks = self.total_blocks
         return {
             "requests": len(self.requests),
             "tokens": self.total_tokens,
@@ -75,6 +86,14 @@ class ServeMetrics:
             "total_nfe": self.total_nfe,
             "nfe_per_request": (self.total_nfe / len(self.requests)
                                 if self.requests else 0.0),
+            # decode-loop residency: the fused device loop syncs ~once
+            # per block; the legacy host loop once (or more) per step
+            "total_host_syncs": self.total_host_syncs,
+            "host_syncs_per_block": (self.total_host_syncs / blocks
+                                     if blocks else 0.0),
+            "device_steps_per_block": (self.total_nfe / blocks
+                                       if blocks else 0.0),
+            "logit_host_copies": self.total_logit_syncs,
             "latency_p50_s": percentile(lat, 50),
             "latency_p99_s": percentile(lat, 99),
             "ttfb_p50_s": percentile(ttfb, 50),

@@ -64,6 +64,8 @@ class Gang:
         # state.nfe by prefill()) reaches the first harvest's delta;
         # compacted/resumed states restart their counters at 0 too.
         self.nfe_seen = 0
+        self.syncs_seen = 0          # state.host_syncs high-water mark
+        self.logit_syncs_seen = 0    # state.logit_syncs high-water mark
 
     @property
     def batch(self) -> int:
@@ -176,8 +178,13 @@ class BlockScheduler:
         completions: List[Completion] = []
         for gang in self.gangs:
             gang.decoder.decode_block(gang.state)
-            c, comp = self._harvest(gang, gang.state.nfe - gang.nfe_seen)
+            c, comp = self._harvest(gang, gang.state.nfe - gang.nfe_seen,
+                                    gang.state.host_syncs - gang.syncs_seen,
+                                    gang.state.logit_syncs
+                                    - gang.logit_syncs_seen)
             gang.nfe_seen = gang.state.nfe
+            gang.syncs_seen = gang.state.host_syncs
+            gang.logit_syncs_seen = gang.state.logit_syncs
             chunks.extend(c)
             completions.extend(comp)
         self._compact()
@@ -269,7 +276,8 @@ class BlockScheduler:
     def _decode_text(self, tokens: np.ndarray) -> str:
         return self.tok.decode(tokens) if self.tok is not None else ""
 
-    def _harvest(self, gang: Gang, dnfe: int):
+    def _harvest(self, gang: Gang, dnfe: int, dsync: int = 0,
+                 dlogit: int = 0):
         st = gang.state
         K = gang.decoder.dcfg.block_size
         P = st.prompt_len
@@ -283,6 +291,8 @@ class BlockScheduler:
             if req is None or gang.emitted[i]:
                 continue
             req.nfe += dnfe
+            req.host_syncs += dsync
+            req.logit_syncs += dlogit
             if req.first_block_time < 0:
                 req.first_block_time = now
             finished = st.row_finished(i)
@@ -303,7 +313,9 @@ class BlockScheduler:
                     latency_s=now - req.submit_time, nfe=req.nfe,
                     ttfb_s=req.first_block_time - req.submit_time,
                     queue_s=req.admit_time - req.submit_time,
-                    n_tokens=n_tok, n_blocks=req.blocks_decoded))
+                    n_tokens=n_tok, n_blocks=req.blocks_decoded,
+                    host_syncs=req.host_syncs,
+                    logit_syncs=req.logit_syncs))
         return chunks, completions
 
     # ------------------------------------------------------ compaction

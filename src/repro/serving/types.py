@@ -25,6 +25,8 @@ class ServeRequest:
     nfe: int = 0                       # batch steps while this row was live
     blocks_decoded: int = 0
     preempted: int = 0                 # times kicked back to the queue
+    host_syncs: int = 0                # device->host sync points attributed
+    logit_syncs: int = 0               # ... of which full-logit copies
 
     @property
     def bucket(self):
@@ -59,6 +61,8 @@ class Completion:
     queue_s: float = 0.0               # submit -> admitted to a slot
     n_tokens: int = 0                  # non-EOS tokens generated
     n_blocks: int = 0
+    host_syncs: int = 0                # host sync points while live
+    logit_syncs: int = 0               # (B, K, V) logit copies while live
 
     @property
     def tokens_per_s(self) -> float:
