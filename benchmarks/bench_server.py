@@ -1,0 +1,222 @@
+"""HTTP serving load harness: closed-loop and open-loop (Poisson)
+workloads against the asyncio front end (``repro.server``), loopback
+only, zero external dependencies.
+
+    PYTHONPATH=src python benchmarks/bench_server.py \
+        [--clients 4] [--per-client 4] [--open-n 32] [--rate 8] \
+        [--slo 5.0] [--out results/BENCH_server.json]
+
+Two load shapes, both over real sockets:
+
+* **closed loop** — ``--clients`` concurrent clients, each issuing its
+  next streaming request only after the previous one finished. Measures
+  the service capability: client-observed TTFB (first SSE chunk) and
+  request latency at fixed concurrency.
+* **open loop** — Poisson arrivals at ``--rate`` req/s regardless of
+  completions (the serving-paper regime: arrival rate is set by the
+  world, not by the server). Every request carries a ``timeout_s`` SLO;
+  the server answers 429 when its bounded admission queue fills and
+  cancels requests that blow the deadline. Reported **goodput** counts
+  only requests that completed fully within the SLO.
+
+The model is the ragged fake-EOS tiny model from ``bench_serving``
+(mixed early-exit/straggler behavior — the regime where continuous
+batching and admission control actually matter), so the whole harness
+isolates scheduling + network behavior from model quality.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np
+
+from bench_serving import GEN_LEN, ragged_model, ragged_workload
+from repro.core.decoder import DecodeConfig
+from repro.data.tokenizer import ByteTokenizer
+from repro.serving import ContinuousEngine, percentile
+from repro.server import EngineLoop, HttpFrontend
+from repro.server import client as C
+
+BLOCK = 8
+
+
+def build_frontend(max_slots: int, max_pending: int):
+    cfg, params = ragged_model()
+    d = DecodeConfig(method="streaming", gen_len=GEN_LEN, block_size=BLOCK,
+                     window=8)
+    eng = ContinuousEngine(cfg, params, d, max_slots=max_slots,
+                           tokenizer=ByteTokenizer(cfg.vocab_size))
+    return HttpFrontend(EngineLoop(eng, max_pending=max_pending,
+                                   idle_poll_s=0.002), port=0), eng
+
+
+async def stream_once(host, port, prompt, max_tokens):
+    """One streaming request; returns client-observed timings."""
+    t0 = time.perf_counter()
+    stream = await C.SSEStream.open(
+        host, port, {"prompt": prompt, "max_tokens": max_tokens})
+    if stream.status != 200:
+        return {"status": stream.status, "latency_s": 0.0}
+    ttfb = None
+    final = None
+    async for event in stream.events():
+        if ttfb is None and "block" in event:
+            ttfb = time.perf_counter() - t0
+        if "finish_reason" in event:
+            final = event
+    await stream.close()
+    latency = time.perf_counter() - t0
+    return {"status": 200, "ttfb_s": ttfb if ttfb is not None else latency,
+            "latency_s": latency,
+            "n_tokens": final["n_tokens"] if final else 0,
+            "finish_reason": final["finish_reason"] if final else "?"}
+
+
+async def closed_loop(host, port, clients, per_client, work):
+    """Fixed-concurrency load: every client runs its share of the
+    workload back-to-back."""
+    async def one_client(idx):
+        out = []
+        for j in range(per_client):
+            prompt, budget = work[(idx * per_client + j) % len(work)]
+            out.append(await stream_once(host, port, prompt, budget))
+        return out
+
+    t0 = time.perf_counter()
+    per = await asyncio.gather(*[one_client(i) for i in range(clients)])
+    wall = time.perf_counter() - t0
+    recs = [r for rs in per for r in rs if r["status"] == 200]
+    toks = sum(r["n_tokens"] for r in recs)
+    return {
+        "clients": clients,
+        "requests": len(recs),
+        "tokens": int(toks),
+        "wall_s": wall,
+        "throughput_tok_s": toks / max(wall, 1e-9),
+        "ttfb_p50_s": percentile([r["ttfb_s"] for r in recs], 50),
+        "ttfb_p99_s": percentile([r["ttfb_s"] for r in recs], 99),
+        "latency_p50_s": percentile([r["latency_s"] for r in recs], 50),
+        "latency_p99_s": percentile([r["latency_s"] for r in recs], 99),
+    }
+
+
+async def open_loop(host, port, n, rate_rps, slo_s, work, seed=11):
+    """Poisson arrivals at ``rate_rps``; each request gets ``slo_s`` as
+    its server-enforced deadline. Goodput counts only requests that
+    finished completely (not cancelled, not rejected) within the SLO."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, n)
+    arrivals = np.cumsum(gaps)
+
+    async def one(i):
+        await asyncio.sleep(float(arrivals[i]))
+        prompt, budget = work[i % len(work)]
+        t0 = time.perf_counter()
+        status, _, doc = await C.complete(
+            host, port, {"prompt": prompt, "max_tokens": budget,
+                         "timeout_s": slo_s})
+        latency = time.perf_counter() - t0
+        if status != 200:
+            return {"status": status, "latency_s": latency}
+        return {"status": 200, "latency_s": latency,
+                "ttfb_s": doc["ttfb_s"], "n_tokens": doc["n_tokens"],
+                "cancelled": doc["cancelled"],
+                "finish_reason": doc["finish_reason"]}
+
+    t0 = time.perf_counter()
+    recs = await asyncio.gather(*[one(i) for i in range(n)])
+    wall = time.perf_counter() - t0
+    ok = [r for r in recs if r["status"] == 200]
+    rejected = sum(r["status"] == 429 for r in recs)
+    deadline_missed = sum(r.get("finish_reason") == "deadline" for r in ok)
+    good = [r for r in ok
+            if not r["cancelled"] and r["latency_s"] <= slo_s]
+    good_toks = sum(r["n_tokens"] for r in good)
+    return {
+        "offered_requests": n,
+        "offered_rps": rate_rps,
+        "slo_s": slo_s,
+        "wall_s": wall,
+        "admission_rejects": int(rejected),
+        "deadline_misses": int(deadline_missed),
+        "completed": len(ok),
+        "good_requests": len(good),
+        "goodput_rps": len(good) / max(wall, 1e-9),
+        "goodput_tok_s": good_toks / max(wall, 1e-9),
+        "ttfb_p50_s": percentile([r["ttfb_s"] for r in ok], 50),
+        "ttfb_p99_s": percentile([r["ttfb_s"] for r in ok], 99),
+        "latency_p50_s": percentile([r["latency_s"] for r in ok], 50),
+        "latency_p99_s": percentile([r["latency_s"] for r in ok], 99),
+    }
+
+
+async def run(args):
+    frontend, eng = build_frontend(args.max_slots, args.max_pending)
+    await frontend.start()
+    host, port = frontend.host, frontend.port
+    work = ragged_workload(max(16, args.open_n))
+    # warmup wave over HTTP: compiles the (bucket, batch, block) shape
+    # lattice before anything is timed
+    await closed_loop(host, port, args.clients,
+                      max(1, 16 // args.clients), work)
+
+    closed = await closed_loop(host, port, args.clients,
+                               args.per_client, work)
+    open_ = await open_loop(host, port, args.open_n, args.rate,
+                            args.slo, work)
+    snap = eng.metrics.snapshot()
+    await frontend.shutdown(drain=True)
+    return {"config": {"max_slots": args.max_slots,
+                       "max_pending": args.max_pending,
+                       "gen_len": GEN_LEN, "block": BLOCK,
+                       "method": "streaming"},
+            "closed_loop": closed,
+            "open_loop": open_,
+            "server_metrics": {k: snap[k] for k in
+                               ("requests", "tokens", "mean_occupancy",
+                                "admission_rejects", "cancelled",
+                                "deadline_misses", "queue_depth")}}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--per-client", type=int, default=4)
+    ap.add_argument("--open-n", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="open-loop Poisson arrival rate, req/s")
+    ap.add_argument("--slo", type=float, default=5.0,
+                    help="per-request deadline (timeout_s), seconds")
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--max-pending", type=int, default=16)
+    ap.add_argument("--out", default="results/BENCH_server.json")
+    args = ap.parse_args()
+
+    result = asyncio.run(run(args))
+    c, o = result["closed_loop"], result["open_loop"]
+    print(f"closed-loop: {c['requests']} req @ {args.clients} clients  "
+          f"tok/s={c['throughput_tok_s']:.1f}  "
+          f"ttfb_p50={c['ttfb_p50_s'] * 1e3:.0f}ms  "
+          f"p50={c['latency_p50_s'] * 1e3:.0f}ms  "
+          f"p99={c['latency_p99_s'] * 1e3:.0f}ms")
+    print(f"open-loop: offered={o['offered_rps']:.1f}rps n={o['offered_requests']}  "
+          f"goodput={o['goodput_rps']:.2f}rps ({o['good_requests']} in SLO "
+          f"{o['slo_s']}s)  rejects={o['admission_rejects']}  "
+          f"deadline_misses={o['deadline_misses']}  "
+          f"p99={o['latency_p99_s'] * 1e3:.0f}ms")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

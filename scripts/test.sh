@@ -5,6 +5,8 @@
 #   scripts/test.sh smoke        # fast serving smoke: both engine modes
 #   scripts/test.sh kernels      # kernel-parity + fused-loop tests and a
 #                                # Pallas-routed continuous-serve smoke
+#   scripts/test.sh server       # HTTP front-end tests (loopback round
+#                                # trip, SSE, 429, deadlines, disconnect)
 #   scripts/test.sh all          # suite + smoke
 #
 # Tests run on the single real CPU device; the dry-run subprocesses set
@@ -41,9 +43,16 @@ run_kernels() {
         --train-steps 120 --max-slots 4 --use-kernels
 }
 
+run_server() {
+    # loopback HTTP/SSE tests; also part of the tier-1 suite (the file
+    # lives in tests/, so the plain pytest run picks it up too)
+    python -m pytest -x -q tests/test_server.py
+}
+
 case "${1:-suite}" in
     smoke)   run_smoke ;;
     kernels) run_kernels ;;
+    server)  run_server ;;
     all)     run_suite; run_smoke ;;
     suite)   run_suite ;;
     *)       run_suite "$@" ;;

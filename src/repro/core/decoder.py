@@ -63,6 +63,19 @@ def round_up_blocks(max_tokens: int, block_size: int) -> int:
     return -(-max_tokens // block_size) * block_size
 
 
+def eos_truncate(gen: np.ndarray, eos_id: int):
+    """Canonical EOS policy for a generated row: the first EOS ends the
+    output and the tail is EOS-filled. Returns ``(tokens, n_generated)``
+    — the single definition shared by ``row_output`` and the serving
+    scheduler's completion builder."""
+    eos_pos = np.where(gen == eos_id)[0]
+    n = int(eos_pos[0]) if len(eos_pos) else len(gen)
+    if len(eos_pos):
+        gen = gen.copy()
+        gen[eos_pos[0]:] = eos_id
+    return gen, n
+
+
 @dataclasses.dataclass(frozen=True)
 class DecodeConfig:
     method: str = "streaming"
@@ -440,12 +453,8 @@ class DiffusionDecoder:
         """Finalized generation for one row: tokens after the prompt,
         truncated at the first EOS (identical to ``finalize`` row b).
         Returns (tokens (gen_len,), n_generated)."""
-        gen = state.x[b, state.prompt_len:].copy()
-        eos_pos = np.where(gen == self.cfg.eos_token_id)[0]
-        n = int(eos_pos[0]) if len(eos_pos) else len(gen)
-        if len(eos_pos):
-            gen[eos_pos[0]:] = self.cfg.eos_token_id
-        return gen, n
+        return eos_truncate(state.x[b, state.prompt_len:].copy(),
+                            self.cfg.eos_token_id)
 
     # ------------------------------------------------------ block step
 

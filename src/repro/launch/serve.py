@@ -5,6 +5,12 @@ requests with the selected method.
     PYTHONPATH=src python -m repro.launch.serve --arch tiny \
         --method streaming --n 32 --mode continuous \
         [--ckpt results/bench_model] [--stream]
+
+or serve over HTTP (SSE streaming, /healthz, /metrics):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tiny --http 8000
+    curl -N localhost:8000/v1/completions \
+        -d '{"prompt": "Q:12+34=? A:", "max_tokens": 16, "stream": true}'
 """
 from __future__ import annotations
 
@@ -37,6 +43,14 @@ def main():
     ap.add_argument("--host-loop", action="store_true",
                     help="legacy per-step host denoise loop instead of "
                          "the fused device-resident loop")
+    ap.add_argument("--http", type=int, default=0, metavar="PORT",
+                    help="serve over HTTP on this port instead of the "
+                         "synthetic in-process workload (continuous "
+                         "mode only; Ctrl-C drains gracefully)")
+    ap.add_argument("--http-host", default="127.0.0.1")
+    ap.add_argument("--max-pending", type=int, default=64,
+                    help="HTTP mode: bounded admission queue; beyond "
+                         "this, POSTs get 429 + Retry-After")
     args = ap.parse_args()
 
     import jax
@@ -59,6 +73,14 @@ def main():
                      window=args.window, tau0=args.tau0, alpha=args.alpha,
                      use_kernels=args.use_kernels, fused=not args.host_loop)
     tok = ByteTokenizer(cfg.vocab_size)
+    if args.http:
+        from repro.serving import ContinuousEngine
+        from repro.server import run as run_http
+        eng = ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
+                               tokenizer=tok)
+        run_http(eng, host=args.http_host, port=args.http,
+                 max_pending=args.max_pending)
+        return
     ds = ArithmeticDataset(tok, seq_len=44)
     samples = ds.eval_set(args.n)
     if args.mode == "continuous":

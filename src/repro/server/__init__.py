@@ -1,0 +1,30 @@
+"""Async network front end over the continuous batcher.
+
+Layering (top of the ``repro.serving`` stack):
+
+    HttpFrontend   — hand-rolled HTTP/1.1 + SSE on asyncio streams:
+                     POST /v1/completions, GET /healthz, GET /metrics,
+                     429 + Retry-After admission, graceful drain
+    EngineLoop     — the dedicated decode thread that owns
+                     ``ContinuousEngine`` and the only thread-safe
+                     submit/cancel surface; enforces deadlines
+    ServerRequest  — validated wire request (max_tokens, stream,
+                     timeout_s, priority)
+    client         — stdlib loopback client for tests and the load
+                     harness (``benchmarks/bench_server.py``)
+
+The split is deliberate: all device work and scheduler mutation happen
+on one thread (no locks in the serving core), all network concurrency
+lives in asyncio, and the two meet only through thread-safe queues —
+see EXPERIMENTS.md for the decision record.
+"""
+from repro.server.http import HttpFrontend, run, serve
+from repro.server.loop import EngineLoop, Ticket
+from repro.server.types import (AdmissionRejected, BadRequest,
+                                ServerError, ServerRequest, finish_reason)
+
+__all__ = [
+    "HttpFrontend", "EngineLoop", "Ticket", "ServerRequest",
+    "ServerError", "BadRequest", "AdmissionRejected", "finish_reason",
+    "serve", "run",
+]

@@ -1,0 +1,128 @@
+"""Stdlib-only asyncio HTTP client for the repro server.
+
+Exists so the test suite and the load harness can drive the server
+over real sockets without external dependencies. Speaks exactly the
+server's dialect: one request per connection, ``Connection: close``,
+chunked SSE for streams.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+from typing import AsyncIterator, Dict, Optional, Tuple
+
+from repro.server import wire
+
+
+def _request_bytes(method: str, path: str, host: str,
+                   body: bytes = b"") -> bytes:
+    head = [f"{method} {path} HTTP/1.1",
+            f"Host: {host}",
+            "Connection: close"]
+    if body:
+        head.append("Content-Type: application/json")
+        head.append(f"Content-Length: {len(body)}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode("latin1") + body
+
+
+async def _read_head(reader: asyncio.StreamReader) \
+        -> Tuple[int, Dict[str, str]]:
+    status_line = await reader.readline()
+    status = int(status_line.split()[1])
+    headers: Dict[str, str] = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        key, _, val = line.decode("latin1").partition(":")
+        headers[key.strip().lower()] = val.strip()
+    return status, headers
+
+
+async def request(host: str, port: int, method: str, path: str,
+                  payload: Optional[dict] = None) \
+        -> Tuple[int, Dict[str, str], bytes]:
+    """One fixed-length request/response exchange. Returns
+    ``(status, headers, body)``."""
+    body = json.dumps(payload).encode() if payload is not None else b""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write(_request_bytes(method, path, host, body))
+        await writer.drain()
+        status, headers = await _read_head(reader)
+        n = int(headers.get("content-length", 0) or 0)
+        resp = await reader.readexactly(n) if n else await reader.read()
+        return status, headers, resp
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass
+
+
+async def complete(host: str, port: int, payload: dict) \
+        -> Tuple[int, Dict[str, str], Optional[dict]]:
+    """``POST /v1/completions`` with ``stream:false`` semantics."""
+    status, headers, body = await request(
+        host, port, "POST", "/v1/completions", payload)
+    doc = json.loads(body) if body else None
+    return status, headers, doc
+
+
+class SSEStream:
+    """An open streaming completion. Iterate ``events()`` for parsed
+    ``data:`` payloads (dicts; the ``[DONE]`` sentinel ends iteration);
+    call ``abort()`` to drop the connection mid-stream — the server
+    must treat that as a cancel."""
+
+    def __init__(self, reader: asyncio.StreamReader,
+                 writer: asyncio.StreamWriter, status: int,
+                 headers: Dict[str, str]):
+        self._reader = reader
+        self._writer = writer
+        self.status = status
+        self.headers = headers
+        self.error: Optional[dict] = None
+
+    @classmethod
+    async def open(cls, host: str, port: int, payload: dict) \
+            -> "SSEStream":
+        payload = dict(payload, stream=True)
+        body = json.dumps(payload).encode()
+        reader, writer = await asyncio.open_connection(host, port)
+        writer.write(_request_bytes("POST", "/v1/completions", host, body))
+        await writer.drain()
+        status, headers = await _read_head(reader)
+        stream = cls(reader, writer, status, headers)
+        if status != 200:
+            n = int(headers.get("content-length", 0) or 0)
+            raw = await reader.readexactly(n) if n else b""
+            stream.error = json.loads(raw) if raw else None
+            await stream.close()
+        return stream
+
+    async def events(self) -> AsyncIterator[dict]:
+        buf = b""
+        async for data in wire.read_chunked(self._reader):
+            buf += data
+            while b"\n\n" in buf:
+                event, buf = buf.split(b"\n\n", 1)
+                for line in event.split(b"\n"):
+                    if not line.startswith(b"data: "):
+                        continue
+                    text = line[len(b"data: "):].decode()
+                    if text == wire.SSE_DONE_SENTINEL:
+                        return
+                    yield json.loads(text)
+
+    def abort(self) -> None:
+        """Hard-drop the connection (simulates a vanished client)."""
+        self._writer.close()
+
+    async def close(self) -> None:
+        self._writer.close()
+        try:
+            await self._writer.wait_closed()
+        except (ConnectionError, OSError):
+            pass

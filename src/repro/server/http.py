@@ -1,0 +1,336 @@
+"""Asyncio HTTP/1.1 front end over ``EngineLoop``.
+
+Routes:
+    POST /v1/completions   JSON body (see ``ServerRequest.from_json``);
+                           ``stream:false`` → one JSON object,
+                           ``stream:true``  → SSE ``data:`` events at
+                           block boundaries, then a final summary event
+                           and a ``[DONE]`` sentinel.
+    GET  /healthz          liveness + drain state + queue depth.
+    GET  /metrics          Prometheus text format from ``ServeMetrics``.
+
+Request lifecycle guarantees:
+* admission is bounded — a full queue answers ``429`` with
+  ``Retry-After`` instead of building unbounded backlog;
+* a streaming client that disconnects (EOF on its socket, or a failed
+  write) cancels its request: the decode slot is freed at the next
+  block boundary and concurrent requests are untouched (non-streaming
+  requests run to completion — EOF after a full request is a legal
+  half-close, not proof the client is gone);
+* ``timeout_s`` deadlines return the partial completion with
+  ``finish_reason="deadline"``;
+* shutdown drains: the listener closes first, in-flight requests run
+  to completion (bounded by ``timeout_s``), then the decode thread
+  stops.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import logging
+import math
+from typing import Optional
+
+from repro.server import wire
+from repro.server.loop import EngineLoop, Ticket
+from repro.server.types import (AdmissionRejected, BadRequest,
+                                ServerRequest, finish_reason)
+
+log = logging.getLogger(__name__)
+
+
+class HttpFrontend:
+    def __init__(self, engine_loop: EngineLoop, host: str = "127.0.0.1",
+                 port: int = 8000, request_timeout_s: float = 10.0):
+        self.loop = engine_loop
+        self.engine = engine_loop.engine
+        self.host = host
+        self.port = port
+        self.request_timeout_s = request_timeout_s   # header-read budget
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._conns: set = set()
+        self._draining = False
+
+    # ------------------------------------------------------ lifecycle
+
+    async def start(self) -> "HttpFrontend":
+        self._server = await asyncio.start_server(
+            self._client, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        if not self.loop.running:
+            self.loop.start()
+        return self
+
+    async def serve_forever(self) -> None:
+        async with self._server:
+            await self._server.serve_forever()
+
+    async def shutdown(self, drain: bool = True,
+                       timeout_s: float = 30.0) -> None:
+        """Graceful drain: stop accepting, let in-flight requests
+        finish, then stop the decode thread. ``drain=False`` cancels
+        everything instead."""
+        self._draining = True
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        if drain:
+            deadline = asyncio.get_running_loop().time() + timeout_s
+            while (self.loop.inflight or self._conns) \
+                    and asyncio.get_running_loop().time() < deadline:
+                await asyncio.sleep(0.02)
+        await asyncio.to_thread(self.loop.close, drain, timeout_s)
+        for task in list(self._conns):
+            task.cancel()
+
+    # ------------------------------------------------------ connection
+
+    async def _client(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        task = asyncio.current_task()
+        self._conns.add(task)
+        try:
+            try:
+                req = await asyncio.wait_for(
+                    wire.read_request(reader),
+                    timeout=self.request_timeout_s)
+            except asyncio.TimeoutError:
+                writer.write(wire.error_response(408, "request timeout"))
+                return
+            except BadRequest as e:
+                writer.write(wire.error_response(400, e.message))
+                return
+            if req is None:
+                return
+            await self._route(req, reader, writer)
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        except asyncio.CancelledError:
+            raise
+        except Exception:
+            log.exception("connection handler failed")
+            try:
+                writer.write(wire.error_response(500, "internal error"))
+            except Exception:
+                pass
+        finally:
+            self._conns.discard(task)
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:
+                pass
+
+    async def _route(self, req: wire.HttpRequest, reader, writer) -> None:
+        if req.path == "/healthz":
+            if req.method != "GET":
+                writer.write(wire.error_response(405, "use GET"))
+                return
+            writer.write(wire.response(200, self._health()))
+        elif req.path == "/metrics":
+            if req.method != "GET":
+                writer.write(wire.error_response(405, "use GET"))
+                return
+            writer.write(wire.response(
+                200, self._metrics_text(),
+                content_type="text/plain; version=0.0.4"))
+        elif req.path == "/v1/completions":
+            if req.method != "POST":
+                writer.write(wire.error_response(405, "use POST"))
+                return
+            await self._completions(req, reader, writer)
+        else:
+            writer.write(wire.error_response(404, f"no route {req.path}"))
+        await writer.drain()
+
+    # ------------------------------------------------------ completions
+
+    async def _completions(self, req: wire.HttpRequest,
+                           reader, writer) -> None:
+        if self._draining:
+            writer.write(wire.error_response(
+                503, "server is draining", {"Retry-After": "5"}))
+            return
+        try:
+            body = json.loads(req.body.decode("utf-8") or "{}")
+        except (json.JSONDecodeError, UnicodeDecodeError):
+            writer.write(wire.error_response(400, "body is not valid JSON"))
+            return
+        try:
+            sreq = ServerRequest.from_json(body)
+        except BadRequest as e:
+            writer.write(wire.error_response(400, e.message))
+            return
+        aioloop = asyncio.get_running_loop()
+        events: asyncio.Queue = asyncio.Queue()
+
+        def deliver(event):           # called from the decode thread
+            aioloop.call_soon_threadsafe(events.put_nowait, event)
+
+        try:
+            ticket = self.loop.submit(sreq, deliver)
+        except AdmissionRejected as e:
+            writer.write(wire.error_response(
+                429, e.message,
+                {"Retry-After": str(int(math.ceil(e.retry_after_s)))}))
+            return
+        if sreq.stream:
+            await self._stream_response(ticket, events, reader, writer)
+        else:
+            await self._json_response(ticket, events, writer)
+
+    async def _wait_disconnect(self, reader) -> None:
+        """Resolves on EOF from the client. Only *streaming* responses
+        treat this as a disconnect-cancel signal: mid-SSE, the client's
+        sole way to give up is dropping the connection, and freeing the
+        decode slot at the next block boundary is the whole point. A
+        non-streaming client may legally half-close after sending its
+        full request (shutdown(SHUT_WR)) while still reading — EOF
+        there does NOT mean gone, so JSON responses always run to
+        completion and are written regardless (a dead peer just makes
+        the write fail, which the connection handler swallows)."""
+        while True:
+            try:
+                data = await reader.read(4096)
+            except (ConnectionError, asyncio.IncompleteReadError):
+                return
+            if not data:
+                return
+
+    async def _json_response(self, ticket: Ticket, events,
+                             writer) -> None:
+        comp = await self._await_done(events)
+        writer.write(wire.response(
+            200, self._completion_json(comp, ticket)))
+        await writer.drain()
+
+    @staticmethod
+    async def _await_done(events: asyncio.Queue):
+        while True:
+            kind, payload = await events.get()
+            if kind == "done":
+                return payload
+
+    async def _stream_response(self, ticket: Ticket, events, reader,
+                               writer) -> None:
+        writer.write(wire.SSE_HEADER)
+        disconnect = asyncio.create_task(self._wait_disconnect(reader))
+        nxt = None
+        try:
+            await writer.drain()
+            while True:
+                nxt = asyncio.create_task(events.get())
+                done, _ = await asyncio.wait(
+                    {disconnect, nxt},
+                    return_when=asyncio.FIRST_COMPLETED)
+                if nxt not in done:
+                    self.loop.cancel(ticket, "disconnect")
+                    return
+                kind, payload = nxt.result()
+                if kind == "chunk":
+                    writer.write(wire.sse_event({
+                        "uid": payload.uid, "block": payload.block_idx,
+                        "text": payload.text,
+                        "finished": payload.finished}))
+                else:                        # ("done", Completion)
+                    writer.write(wire.sse_event(
+                        self._completion_json(payload, ticket)))
+                    writer.write(wire.sse_event(wire.SSE_DONE_SENTINEL))
+                    writer.write(wire.CHUNKED_EOF)
+                    await writer.drain()
+                    return
+                await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            self.loop.cancel(ticket, "disconnect")
+        finally:
+            disconnect.cancel()
+            if nxt is not None:
+                nxt.cancel()
+
+    @staticmethod
+    def _completion_json(comp, ticket: Ticket) -> dict:
+        return {
+            "uid": comp.uid, "text": comp.text,
+            "n_tokens": comp.n_tokens, "n_blocks": comp.n_blocks,
+            "max_tokens": comp.max_tokens,
+            "finish_reason": finish_reason(comp, ticket.cancel_reason),
+            "cancelled": comp.cancelled,
+            "latency_s": comp.latency_s, "ttfb_s": comp.ttfb_s,
+            "queue_s": comp.queue_s, "nfe": comp.nfe,
+        }
+
+    # ------------------------------------------------------ health/metrics
+
+    def _health(self) -> dict:
+        sched = self.engine.scheduler
+        return {"status": "draining" if self._draining else "ok",
+                "inflight": self.loop.inflight,
+                "queue_depth": self.engine.metrics.queue_depth,
+                "live_rows": sched.live_rows,
+                "idle": sched.idle}
+
+    def _metrics_text(self) -> str:
+        snap = self.engine.metrics.snapshot()
+        out = []
+
+        def emit(name, value, mtype, help_text):
+            out.append(f"# HELP {name} {help_text}")
+            out.append(f"# TYPE {name} {mtype}")
+            out.append(f"{name} {value}")
+
+        emit("repro_requests_total", snap["requests"], "counter",
+             "Completed requests (including cancelled).")
+        emit("repro_tokens_total", snap["tokens"], "counter",
+             "Generated tokens across completed requests.")
+        emit("repro_nfe_total", snap["total_nfe"], "counter",
+             "Model forward evaluations.")
+        emit("repro_admission_rejects_total", snap["admission_rejects"],
+             "counter", "Requests rejected with 429 (queue full).")
+        emit("repro_cancelled_total", snap["cancelled"], "counter",
+             "Requests cancelled (explicit, disconnect, or deadline).")
+        emit("repro_deadline_misses_total", snap["deadline_misses"],
+             "counter", "Cancelled requests whose cause was timeout_s.")
+        emit("repro_queue_depth", snap["queue_depth"], "gauge",
+             "Requests queued (front end + scheduler), not in a slot.")
+        emit("repro_inflight", self.loop.inflight, "gauge",
+             "Requests admitted and not yet finished.")
+        emit("repro_mean_occupancy", f"{snap['mean_occupancy']:.6f}",
+             "gauge", "Mean decode-slot occupancy.")
+        emit("repro_throughput_tok_per_s",
+             f"{snap['throughput_tok_s']:.6f}", "gauge",
+             "Generated tokens per second of scheduler wall time.")
+        for metric, key in (("repro_latency_seconds", "latency"),
+                            ("repro_ttfb_seconds", "ttfb")):
+            out.append(f"# HELP {metric} Request {key} quantiles.")
+            out.append(f"# TYPE {metric} summary")
+            for q, snap_key in (("0.5", f"{key}_p50_s"),
+                                ("0.99", f"{key}_p99_s")):
+                out.append(f'{metric}{{quantile="{q}"}} '
+                           f"{snap[snap_key]:.6f}")
+        return "\n".join(out) + "\n"
+
+
+async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
+                max_pending: int = 64) -> None:
+    """Run the HTTP front end until cancelled, then drain gracefully."""
+    frontend = HttpFrontend(EngineLoop(engine, max_pending=max_pending),
+                            host=host, port=port)
+    await frontend.start()
+    print(f"repro.server listening on http://{frontend.host}:"
+          f"{frontend.port}  (POST /v1/completions, GET /healthz, "
+          f"GET /metrics)")
+    try:
+        await frontend.serve_forever()
+    except asyncio.CancelledError:
+        pass
+    finally:
+        await frontend.shutdown(drain=True)
+
+
+def run(engine, host: str = "127.0.0.1", port: int = 8000,
+        max_pending: int = 64) -> None:
+    """Blocking entry point used by ``repro.launch.serve --http``."""
+    try:
+        asyncio.run(serve(engine, host, port, max_pending))
+    except KeyboardInterrupt:
+        pass

@@ -1,0 +1,275 @@
+"""Dedicated decode-thread tick loop over ``ContinuousEngine``.
+
+The continuous batcher is a synchronous pull loop: someone must call
+``engine.step()`` for blocks to decode. ``EngineLoop`` owns that call
+on a single daemon thread so the asyncio front end never blocks on
+device work, and exposes the only thread-safe surface into the engine:
+
+* ``submit(req, deliver)`` — called from any thread. Admission is
+  checked synchronously against a bounded in-flight budget (reject →
+  ``AdmissionRejected`` → HTTP 429); accepted requests enter a
+  priority queue serviced by the decode thread.
+* ``cancel(ticket, reason)`` — asynchronous; takes effect immediately
+  for requests still queued in the front end, at the next block
+  boundary for rows already decoding (see ``BlockScheduler.cancel``).
+* events — the decode thread calls ``ticket.deliver(event)`` with
+  ``("chunk", BlockChunk)`` per committed block and a final
+  ``("done", Completion)``. The HTTP layer bridges ``deliver`` onto a
+  per-request ``asyncio.Queue`` via ``call_soon_threadsafe``.
+
+All engine/scheduler state is touched exclusively by the decode thread
+(submissions and cancels are marshalled through a command queue), so
+the serving subsystem itself needs no locks. Deadlines (``timeout_s``)
+are enforced here each iteration: an expired request is cancelled with
+reason ``deadline`` and counted in ``ServeMetrics.deadline_misses``.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import logging
+import queue
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.types import Completion
+from repro.server.types import AdmissionRejected, ServerRequest
+
+log = logging.getLogger(__name__)
+
+Event = Tuple[str, object]
+
+
+class Ticket:
+    """Handle for one in-flight request: the cancellation token and the
+    delivery target. ``uid`` is assigned once the request is handed to
+    the scheduler; until then the ticket lives in the front-end queue
+    and can be cancelled without the engine ever seeing it."""
+
+    def __init__(self, req: ServerRequest,
+                 deliver: Callable[[Event], None]):
+        self.req = req
+        self.deliver = deliver
+        self.submit_time = time.perf_counter()
+        self.deadline = (self.submit_time + req.timeout_s
+                         if req.timeout_s else None)
+        self.uid: Optional[int] = None
+        self.done = False
+        self.cancel_reason: Optional[str] = None
+
+    def _emit(self, event: Event) -> None:
+        try:
+            self.deliver(event)
+        except Exception:
+            log.exception("ticket delivery failed (uid=%s)", self.uid)
+
+
+class EngineLoop:
+    def __init__(self, engine, max_pending: int = 64,
+                 idle_poll_s: float = 0.05):
+        self.engine = engine
+        self.max_pending = max_pending
+        self.idle_poll_s = idle_poll_s
+        self._cmds: "queue.Queue" = queue.Queue()
+        self._pending: List[list] = []      # heap: [-priority, seq, ticket]
+        self._seq = itertools.count()
+        self._live = {}                     # uid -> Ticket
+        self._inflight = 0
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._drain_on_stop = True
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="repro-engine-loop")
+        engine.on_chunk(None, self._on_chunk)
+
+    # ------------------------------------------------- any-thread API
+
+    @property
+    def inflight(self) -> int:
+        with self._lock:
+            return self._inflight
+
+    @property
+    def running(self) -> bool:
+        return self._thread.is_alive()
+
+    def start(self) -> "EngineLoop":
+        self._thread.start()
+        return self
+
+    def submit(self, req: ServerRequest,
+               deliver: Callable[[Event], None]) -> Ticket:
+        """Admit or reject *synchronously*; never blocks on the engine.
+        The bounded budget covers everything submitted but unfinished
+        (front-end queue + scheduler queue + decoding rows).
+
+        Counter ownership: ``admission_rejects`` is written only here,
+        under ``_lock`` (the decode thread pre-checks ``max_waiting``
+        in ``_feed`` so the engine-side increment never fires);
+        ``cancelled``/``deadline_misses`` are written only by the
+        decode thread. One writer per counter — no torn updates."""
+        with self._lock:
+            if self._stop.is_set():
+                self.engine.metrics.admission_rejects += 1
+                raise AdmissionRejected("server is shutting down",
+                                        retry_after_s=5.0)
+            if self._inflight >= self.max_pending:
+                self.engine.metrics.admission_rejects += 1
+                raise AdmissionRejected(
+                    f"admission queue full ({self.max_pending} in flight)",
+                    retry_after_s=1.0)
+            self._inflight += 1
+        ticket = Ticket(req, deliver)
+        self._cmds.put(("submit", ticket, None))
+        return ticket
+
+    def cancel(self, ticket: Ticket, reason: str = "cancelled") -> None:
+        self._cmds.put(("cancel", ticket, reason))
+
+    def close(self, drain: bool = True, timeout_s: float = 30.0) -> bool:
+        """Stop the loop. ``drain=True`` finishes everything already
+        admitted first (new submits are rejected); ``drain=False``
+        cancels all in-flight work. Returns True if the thread exited
+        within ``timeout_s``."""
+        self._drain_on_stop = drain
+        self._stop.set()
+        self._cmds.put(("wake", None, None))
+        if self._thread.is_alive():
+            self._thread.join(timeout_s)
+        return not self._thread.is_alive()
+
+    # ------------------------------------------------- decode thread
+
+    def _run(self) -> None:
+        eng = self.engine
+        while True:
+            busy = bool(self._pending or self._live
+                        or not eng.scheduler.idle)
+            self._drain_commands(block=not busy)
+            if self._stop.is_set():
+                if not self._drain_on_stop:
+                    self._cancel_all("shutdown")
+                elif not (self._pending or self._live
+                          or not eng.scheduler.idle):
+                    return
+            self._check_deadlines()
+            self._feed()
+            if not eng.scheduler.idle:
+                try:
+                    for comp in eng.step():
+                        self._finish(comp)
+                except Exception:
+                    # a decode failure must not kill the serving thread:
+                    # fail every in-flight request and keep accepting
+                    log.exception("engine.step failed; failing in-flight "
+                                  "requests")
+                    self._cancel_all("error")
+            eng.metrics.queue_depth = (len(self._pending)
+                                       + len(eng.scheduler.waiting))
+            if self._stop.is_set() and not self._drain_on_stop \
+                    and not self._live and eng.scheduler.idle:
+                return
+
+    def _drain_commands(self, block: bool) -> None:
+        try:
+            cmd = self._cmds.get(timeout=self.idle_poll_s) if block \
+                else self._cmds.get_nowait()
+        except queue.Empty:
+            return
+        while True:
+            self._exec(cmd)
+            try:
+                cmd = self._cmds.get_nowait()
+            except queue.Empty:
+                return
+
+    def _exec(self, cmd) -> None:
+        kind, ticket, reason = cmd
+        if kind == "submit":
+            heapq.heappush(self._pending,
+                           [-ticket.req.priority, next(self._seq), ticket])
+        elif kind == "cancel":
+            self._cancel_ticket(ticket, reason)
+
+    def _feed(self) -> None:
+        """Hand queued requests to the scheduler in priority order.
+        The scheduler's own waiting queue is kept topped up to
+        ``max_slots`` so its within-tick backfill always has material;
+        everything beyond that waits here, where priority and
+        pre-admission cancellation still apply. An engine-level
+        ``max_waiting`` bound is respected by pre-checking, never by
+        letting ``engine.submit`` raise — that path counts an
+        admission *reject*, and backing off to retry is not one."""
+        sched = self.engine.scheduler
+        limit = sched.max_slots if sched.max_waiting is None \
+            else min(sched.max_slots, sched.max_waiting)
+        while self._pending and len(sched.waiting) < limit:
+            _, _, ticket = heapq.heappop(self._pending)
+            if ticket.done:
+                continue
+            try:
+                ticket.uid = self.engine.submit(
+                    ticket.req.prompt, max_tokens=ticket.req.max_tokens)
+            except RuntimeError:
+                # defensive only (the pre-check makes this unreachable
+                # on the single mutating thread): undo the spurious
+                # reject count and park the ticket for the next round
+                self.engine.metrics.admission_rejects -= 1
+                heapq.heappush(self._pending,
+                               [-ticket.req.priority, next(self._seq),
+                                ticket])
+                break
+            self._live[ticket.uid] = ticket
+
+    def _check_deadlines(self) -> None:
+        now = time.perf_counter()
+        expired = [t for t in
+                   [e[2] for e in self._pending] + list(self._live.values())
+                   if not t.done and t.deadline is not None
+                   and now >= t.deadline]
+        for t in expired:
+            self.engine.metrics.deadline_misses += 1
+            self._cancel_ticket(t, "deadline")
+
+    def _cancel_all(self, reason: str) -> None:
+        for entry in list(self._pending):
+            self._cancel_ticket(entry[2], reason)
+        for t in list(self._live.values()):
+            self._cancel_ticket(t, reason)
+
+    def _cancel_ticket(self, ticket: Ticket, reason: str) -> None:
+        if ticket.done:
+            return
+        ticket.cancel_reason = reason
+        if ticket.uid is None:
+            # never reached the engine: synthesize the empty completion
+            self.engine.metrics.cancelled += 1
+            self._conclude(ticket, Completion(
+                uid=-1, text="", tokens=np.zeros(0, np.int32),
+                latency_s=time.perf_counter() - ticket.submit_time,
+                nfe=0, max_tokens=ticket.req.max_tokens, cancelled=True))
+            return
+        comp = self.engine.cancel(ticket.uid)
+        if comp is not None:    # was waiting/paused: finished immediately
+            self._live.pop(ticket.uid, None)
+            self._conclude(ticket, comp)
+        # else: active row — Completion arrives via step() -> _finish
+
+    def _on_chunk(self, chunk) -> None:
+        ticket = self._live.get(chunk.uid)
+        if ticket is not None and not ticket.done:
+            ticket._emit(("chunk", chunk))
+
+    def _finish(self, comp: Completion) -> None:
+        ticket = self._live.pop(comp.uid, None)
+        if ticket is not None:
+            self._conclude(ticket, comp)
+
+    def _conclude(self, ticket: Ticket, comp: Completion) -> None:
+        ticket.done = True
+        with self._lock:
+            self._inflight -= 1
+        ticket._emit(("done", comp))

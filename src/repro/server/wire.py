@@ -1,0 +1,144 @@
+"""Minimal HTTP/1.1 + SSE wire handling on raw asyncio streams.
+
+No dependency beyond the stdlib: the container policy forbids new
+packages, and the subset of HTTP this server speaks (one request per
+connection, ``Content-Length`` bodies in, fixed-length JSON or chunked
+SSE out) is small enough that hand-rolling it is simpler than vendoring
+a framework. Every connection is ``Connection: close`` — the load we
+care about is long-lived streaming responses, where keep-alive buys
+nothing and complicates disconnect detection.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+from typing import Dict, Optional, Union
+
+from repro.server.types import BadRequest
+
+REASONS = {
+    200: "OK", 400: "Bad Request", 404: "Not Found",
+    405: "Method Not Allowed", 408: "Request Timeout",
+    413: "Payload Too Large", 429: "Too Many Requests",
+    500: "Internal Server Error", 503: "Service Unavailable",
+}
+
+MAX_HEADER_BYTES = 16384
+MAX_BODY_BYTES = 1 << 20
+
+
+@dataclasses.dataclass
+class HttpRequest:
+    method: str
+    path: str
+    headers: Dict[str, str]            # keys lower-cased
+    body: bytes
+
+
+async def read_request(reader: asyncio.StreamReader) \
+        -> Optional[HttpRequest]:
+    """Parse one request. Returns ``None`` on a cleanly closed
+    connection before any bytes; raises ``BadRequest`` on malformed
+    input (the caller maps it to a 4xx response)."""
+    try:
+        line = await reader.readline()
+    except (ConnectionError, asyncio.IncompleteReadError):
+        return None
+    if not line:
+        return None
+    parts = line.decode("latin1").strip().split()
+    if len(parts) != 3 or not parts[2].startswith("HTTP/1."):
+        raise BadRequest("malformed request line")
+    method, path, _version = parts
+    headers: Dict[str, str] = {}
+    total = len(line)
+    while True:
+        h = await reader.readline()
+        total += len(h)
+        if total > MAX_HEADER_BYTES:
+            raise BadRequest("headers too large")
+        if h in (b"\r\n", b"\n", b""):
+            break
+        key, sep, val = h.decode("latin1").partition(":")
+        if not sep:
+            raise BadRequest("malformed header line")
+        headers[key.strip().lower()] = val.strip()
+    body = b""
+    if "content-length" in headers:
+        try:
+            n = int(headers["content-length"])
+        except ValueError:
+            raise BadRequest("bad Content-Length")
+        if n > MAX_BODY_BYTES:
+            raise BadRequest("body too large")
+        if n:
+            try:
+                body = await reader.readexactly(n)
+            except asyncio.IncompleteReadError:
+                return None
+    elif headers.get("transfer-encoding"):
+        raise BadRequest("chunked request bodies are not supported")
+    return HttpRequest(method, path.split("?", 1)[0], headers, body)
+
+
+def response(status: int, body: Union[bytes, dict, str] = b"",
+             content_type: str = "application/json",
+             extra_headers: Dict[str, str] = None) -> bytes:
+    """Fixed-length response, ready to write."""
+    if isinstance(body, dict):
+        body = (json.dumps(body) + "\n").encode()
+    elif isinstance(body, str):
+        body = body.encode()
+    head = [f"HTTP/1.1 {status} {REASONS.get(status, 'Unknown')}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(body)}",
+            "Connection: close"]
+    for k, v in (extra_headers or {}).items():
+        head.append(f"{k}: {v}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode("latin1") + body
+
+
+def error_response(status: int, message: str,
+                   extra_headers: Dict[str, str] = None) -> bytes:
+    return response(status, {"error": message},
+                    extra_headers=extra_headers)
+
+
+SSE_HEADER = (b"HTTP/1.1 200 OK\r\n"
+              b"Content-Type: text/event-stream\r\n"
+              b"Cache-Control: no-cache\r\n"
+              b"Connection: close\r\n"
+              b"Transfer-Encoding: chunked\r\n\r\n")
+
+SSE_DONE_SENTINEL = "[DONE]"
+
+
+def chunked(data: bytes) -> bytes:
+    """One HTTP/1.1 chunked-transfer frame."""
+    return f"{len(data):x}\r\n".encode("latin1") + data + b"\r\n"
+
+
+CHUNKED_EOF = b"0\r\n\r\n"
+
+
+def sse_event(payload: Union[dict, str]) -> bytes:
+    """One SSE ``data:`` event, already wrapped in a chunked frame."""
+    data = payload if isinstance(payload, str) else json.dumps(payload)
+    return chunked(f"data: {data}\n\n".encode())
+
+
+async def read_chunked(reader: asyncio.StreamReader):
+    """Async generator over the data of a chunked response body
+    (client side; used by the loopback client and the load harness)."""
+    while True:
+        size_line = await reader.readline()
+        if not size_line:
+            return
+        n = int(size_line.strip() or b"0", 16)
+        if n == 0:
+            await reader.readline()      # trailing CRLF
+            return
+        data = await reader.readexactly(n)
+        await reader.readexactly(2)      # chunk CRLF
+        yield data

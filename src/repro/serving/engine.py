@@ -54,11 +54,30 @@ class ContinuousEngine:
         toks = self.tok.encode(prompt) if isinstance(prompt, str) \
             else np.asarray(prompt, np.int32)
         gen_len = round_up_blocks(max_tokens, self.dcfg.block_size)
-        req = self.scheduler.submit(toks, gen_len, max_tokens)
+        try:
+            req = self.scheduler.submit(toks, gen_len, max_tokens)
+        except RuntimeError:
+            self.metrics.admission_rejects += 1
+            raise
         return req.uid
 
     def preempt(self, uid: int) -> None:
         self.scheduler.preempt(uid)
+
+    def cancel(self, uid: int) -> Optional[Completion]:
+        """Terminate a request and free its slot (≠ ``preempt``, which
+        parks the state for resumption). Waiting/paused requests finish
+        here and now — the partial ``Completion`` is returned and a
+        terminal chunk is published so any stream consumer shuts down.
+        Active rows are released at the next block boundary and their
+        ``Completion`` (``cancelled=True``) comes out of that ``step``;
+        this returns ``None`` for them."""
+        comp = self.scheduler.cancel(uid)
+        if comp is not None:
+            self._record(comp)
+            self.router.publish([BlockChunk(
+                uid, 0, np.zeros(0, np.int32), "", True, False)])
+        return comp
 
     def on_chunk(self, uid: Optional[int], fn) -> None:
         """Register a per-block callback (``uid=None`` = all requests)."""
@@ -79,17 +98,23 @@ class ContinuousEngine:
         self.metrics.sample_tick(self.scheduler.last_decoded_rows, dt)
         self.router.publish(chunks)
         for comp in completions:
-            self.metrics.add_request(RequestMetrics(
-                uid=comp.uid, queue_s=comp.queue_s, ttfb_s=comp.ttfb_s,
-                latency_s=comp.latency_s, n_tokens=comp.n_tokens,
-                nfe=comp.nfe, n_blocks=comp.n_blocks,
-                host_syncs=comp.host_syncs, logit_syncs=comp.logit_syncs))
-            self.stats["requests"] += 1
-            self.stats["tokens"] += comp.n_tokens
+            self._record(comp)
         if chunks or completions:
             self.stats["batches"] += 1
         self.stats["time_s"] += dt
+        self.metrics.queue_depth = len(self.scheduler.waiting)
         return completions
+
+    def _record(self, comp: Completion) -> None:
+        self.metrics.add_request(RequestMetrics(
+            uid=comp.uid, queue_s=comp.queue_s, ttfb_s=comp.ttfb_s,
+            latency_s=comp.latency_s, n_tokens=comp.n_tokens,
+            nfe=comp.nfe, n_blocks=comp.n_blocks,
+            host_syncs=comp.host_syncs, logit_syncs=comp.logit_syncs))
+        if comp.cancelled:
+            self.metrics.cancelled += 1
+        self.stats["requests"] += 1
+        self.stats["tokens"] += comp.n_tokens
 
     def run_to_completion(self) -> List[Completion]:
         out: List[Completion] = []

@@ -39,6 +39,11 @@ class ServeMetrics:
     total_nfe: int = 0
     total_host_syncs: int = 0          # fused loop: ~1 per decoded block
     total_logit_syncs: int = 0         # host loop: 1 per step (fixed-sched)
+    # request-lifecycle counters, exported by the HTTP /metrics endpoint
+    queue_depth: int = 0               # gauge: queued, not yet in a slot
+    admission_rejects: int = 0         # bounded-queue rejections (HTTP 429)
+    cancelled: int = 0                 # explicit / disconnect / deadline
+    deadline_misses: int = 0           # cancels whose cause was timeout_s
 
     def sample_tick(self, live_rows: int, tick_dt: float) -> None:
         self.ticks += 1
@@ -94,6 +99,10 @@ class ServeMetrics:
             "device_steps_per_block": (self.total_nfe / blocks
                                        if blocks else 0.0),
             "logit_host_copies": self.total_logit_syncs,
+            "queue_depth": self.queue_depth,
+            "admission_rejects": self.admission_rejects,
+            "cancelled": self.cancelled,
+            "deadline_misses": self.deadline_misses,
             "latency_p50_s": percentile(lat, 50),
             "latency_p99_s": percentile(lat, 99),
             "ttfb_p50_s": percentile(ttfb, 50),

@@ -23,6 +23,15 @@ Preemption is block-level: ``preempt(uid)`` extracts the row's
 ``DecodeState`` at the next block boundary, parks it without a KV
 buffer, and re-admits it ahead of the waiting queue when a slot frees —
 resuming at the exact block it left off.
+
+Cancellation is distinct from preemption: ``cancel(uid)`` gives the
+slot up for good and terminates the request with a *partial*
+``Completion`` (whatever was committed so far, EOS/max_tokens
+trimmed). A waiting or paused request is cancelled immediately; an
+active row is released at the next block boundary — before the next
+tick's decode, so a cancelled request never pays for another block.
+The async front end (``repro.server``) drives it on client disconnect
+and deadline expiry.
 """
 from __future__ import annotations
 
@@ -33,7 +42,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.decoder import DecodeConfig, DecodeState, DiffusionDecoder
+from repro.core.decoder import (DecodeConfig, DecodeState, DiffusionDecoder,
+                                eos_truncate)
 from repro.models.config import ModelConfig
 from repro.serving.pool import PrefixKVPool
 from repro.serving.types import BlockChunk, Completion, ServeRequest
@@ -110,6 +120,7 @@ class BlockScheduler:
         self.gangs: List[Gang] = []
         self._decoders: Dict[int, DiffusionDecoder] = {}
         self._preempt: set = set()
+        self._cancel: set = set()
         self._uid = 0
         self.last_decoded_rows = 0
 
@@ -165,17 +176,83 @@ class BlockScheduler:
         if active:
             self._preempt.add(uid)
 
+    def cancel(self, uid: int) -> Optional[Completion]:
+        """Terminate a request wherever it lives, freeing its resources
+        for good (contrast ``preempt``, which parks the state to
+        resume). Waiting/paused requests are cancelled *now* and their
+        partial ``Completion`` is returned. Active rows are flagged and
+        released at the next block boundary — the partial ``Completion``
+        comes out of the next ``tick()`` (return value ``None`` here).
+        Unknown or already-finished uids return ``None`` and set no
+        flag, so a stale cancel can never fire on a future uid."""
+        now = time.perf_counter()
+        for r in self.waiting:
+            if r.uid == uid:
+                self.waiting.remove(r)
+                return self._make_completion(
+                    r, np.zeros(0, np.int32), now, cancelled=True)
+        for item in self.paused:
+            req, state, decoder = item
+            if req.uid == uid:
+                self.paused.remove(item)
+                K = decoder.dcfg.block_size
+                gen = state.x[0, state.prompt_len:
+                              state.prompt_len + state.block_idx * K].copy()
+                return self._make_completion(req, gen, now, cancelled=True)
+        active = any(r is not None and r.uid == uid and not g.emitted[i]
+                     for g in self.gangs
+                     for i, r in enumerate(g.requests))
+        if active:
+            self._preempt.discard(uid)   # cancel wins over preempt
+            self._cancel.add(uid)
+        return None
+
+    def _apply_cancels(self):
+        """Release cancel-flagged rows at the block boundary: vacate the
+        lane before this tick's decode (a cancelled request never pays
+        for another block), emit the partial ``Completion`` plus a
+        terminal ``BlockChunk`` so streams shut down, then compact so
+        freed slots are backfillable this same tick. dkv gangs keep
+        their lanes (non-batch-invariant) with ``done`` masking the dead
+        row, exactly like preemption."""
+        chunks: List[BlockChunk] = []
+        completions: List[Completion] = []
+        if not self._cancel:
+            return chunks, completions
+        now = time.perf_counter()
+        for gang in self.gangs:
+            st = gang.state
+            K = gang.decoder.dcfg.block_size
+            P = st.prompt_len
+            for i in gang.live_rows():
+                req = gang.requests[i]
+                if req.uid not in self._cancel:
+                    continue
+                self._cancel.discard(req.uid)
+                gen = st.x[i, P:P + st.block_idx * K].copy()
+                completions.append(
+                    self._make_completion(req, gen, now, cancelled=True))
+                chunks.append(BlockChunk(req.uid, st.block_idx,
+                                         np.zeros(0, np.int32), "",
+                                         True, False))
+                gang.requests[i] = None
+                gang.emitted[i] = True
+                st.done[i] = True
+        self._cancel.clear()   # flags never outlive their sweep
+        self._compact()
+        return chunks, completions
+
     # ------------------------------------------------------ tick
 
     def tick(self) -> Tuple[List[BlockChunk], List[Completion]]:
-        """One scheduler round: admit → advance every gang one block →
-        harvest chunks/completions → compact + backfill."""
+        """One scheduler round: release cancelled rows → admit →
+        advance every gang one block → harvest chunks/completions →
+        compact + backfill."""
+        chunks, completions = self._apply_cancels()
         self._admit()
         # rows whose decode this tick actually pays for — sampled before
         # the decode loop so occupancy isn't attributed post-compaction
         self.last_decoded_rows = self.live_rows
-        chunks: List[BlockChunk] = []
-        completions: List[Completion] = []
         for gang in self.gangs:
             gang.decoder.decode_block(gang.state)
             c, comp = self._harvest(gang, gang.state.nfe - gang.nfe_seen,
@@ -276,6 +353,28 @@ class BlockScheduler:
     def _decode_text(self, tokens: np.ndarray) -> str:
         return self.tok.decode(tokens) if self.tok is not None else ""
 
+    def _make_completion(self, req: ServeRequest, gen: np.ndarray,
+                         now: float, cancelled: bool = False) -> Completion:
+        """Terminal record from a raw generated region. EOS-truncates
+        (``eos_truncate``, the same policy as ``row_output``), then
+        trims to the *requested* ``max_tokens`` — ``gen_len`` is
+        block-rounded, and the surplus must never leave the engine."""
+        gen, n_tok = eos_truncate(np.asarray(gen, np.int32),
+                                  self.cfg.eos_token_id)
+        gen = gen[:req.max_tokens]
+        n_tok = min(n_tok, req.max_tokens)
+        req.finish_time = now
+        admit = req.admit_time if req.admit_time >= 0 else now
+        first = req.first_block_time if req.first_block_time >= 0 else now
+        return Completion(
+            uid=req.uid, text=self._decode_text(gen), tokens=gen,
+            latency_s=now - req.submit_time, nfe=req.nfe,
+            ttfb_s=first - req.submit_time,
+            queue_s=admit - req.submit_time,
+            n_tokens=n_tok, n_blocks=req.blocks_decoded,
+            max_tokens=req.max_tokens, cancelled=cancelled,
+            host_syncs=req.host_syncs, logit_syncs=req.logit_syncs)
+
     def _harvest(self, gang: Gang, dnfe: int, dsync: int = 0,
                  dlogit: int = 0):
         st = gang.state
@@ -299,23 +398,25 @@ class BlockScheduler:
             if bidx >= 0:   # a zero-block request decodes nothing
                 req.blocks_decoded += 1
                 toks = st.x[i, bstart:bstart + K].copy()
-                chunks.append(BlockChunk(req.uid, bidx, toks,
-                                         self._decode_text(toks),
+                # chunk *text* is what network consumers concatenate:
+                # clamp it to the requested max_tokens (gen_len is
+                # block-rounded) and mute blocks after an EOS block so
+                # joined stream text always equals Completion.text
+                allowed = max(0, min(K, req.max_tokens - bidx * K))
+                if req.eos_seen:
+                    allowed = 0
+                text = self._decode_text(toks[:allowed])
+                if bool((toks[:allowed] == eos).any()):
+                    req.eos_seen = True
+                chunks.append(BlockChunk(req.uid, bidx, toks, text,
                                          finished,
                                          bool((toks == eos).any())))
             if finished:
                 gang.emitted[i] = True
-                self._preempt.discard(req.uid)  # flag dies with request
-                req.finish_time = now
-                out, n_tok = gang.decoder.row_output(st, i)
-                completions.append(Completion(
-                    uid=req.uid, text=self._decode_text(out), tokens=out,
-                    latency_s=now - req.submit_time, nfe=req.nfe,
-                    ttfb_s=req.first_block_time - req.submit_time,
-                    queue_s=req.admit_time - req.submit_time,
-                    n_tokens=n_tok, n_blocks=req.blocks_decoded,
-                    host_syncs=req.host_syncs,
-                    logit_syncs=req.logit_syncs))
+                self._preempt.discard(req.uid)  # flags die with request
+                self._cancel.discard(req.uid)
+                completions.append(self._make_completion(
+                    req, st.x[i, P:].copy(), now))
         return chunks, completions
 
     # ------------------------------------------------------ compaction

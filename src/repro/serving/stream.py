@@ -14,37 +14,63 @@ concatenate ``chunk.text`` pieces directly.
 """
 from __future__ import annotations
 
-from collections import defaultdict, deque
+import logging
+from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
 from repro.serving.types import BlockChunk
 
+log = logging.getLogger(__name__)
+
 
 class StreamRouter:
+    """Chunk fan-out. A subscriber that raises is logged and dropped —
+    one broken consumer must not abort delivery to the rest of the
+    batch — and emptied subscriber lists (per-uid *and* wildcard) are
+    garbage-collected so a long-lived engine doesn't accumulate dead
+    keys from every request it ever served."""
+
     def __init__(self):
         self._subs: Dict[Optional[int], List[Callable[[BlockChunk], None]]] \
-            = defaultdict(list)
+            = {}
 
     def subscribe(self, uid: Optional[int],
                   fn: Callable[[BlockChunk], None]) -> None:
         """``uid=None`` subscribes to every request's chunks."""
-        self._subs[uid].append(fn)
+        self._subs.setdefault(uid, []).append(fn)
 
     def unsubscribe(self, uid: Optional[int],
                     fn: Callable[[BlockChunk], None]) -> None:
-        if fn in self._subs.get(uid, ()):
-            self._subs[uid].remove(fn)
+        subs = self._subs.get(uid)
+        if subs and fn in subs:
+            subs.remove(fn)
+        if subs is not None and not subs:
+            del self._subs[uid]
+
+    def _deliver(self, key: Optional[int], chunk: BlockChunk) -> None:
+        subs = self._subs.get(key)
+        if not subs:
+            return
+        for fn in list(subs):
+            try:
+                fn(chunk)
+            except Exception:
+                log.exception("stream subscriber for uid=%s raised; "
+                              "unsubscribing it", key)
+                try:
+                    subs.remove(fn)
+                except ValueError:
+                    pass
+        if not subs:
+            self._subs.pop(key, None)
 
     def publish(self, chunks: List[BlockChunk]) -> None:
         for chunk in chunks:
-            for fn in self._subs.get(chunk.uid, ()):
-                fn(chunk)
-            for fn in self._subs.get(None, ()):
-                fn(chunk)
-        # drop per-uid subscribers once their request finished
-        for chunk in chunks:
-            if chunk.finished and chunk.uid in self._subs:
-                del self._subs[chunk.uid]
+            self._deliver(chunk.uid, chunk)
+            self._deliver(None, chunk)
+            # drop per-uid subscribers once their request finished
+            if chunk.finished:
+                self._subs.pop(chunk.uid, None)
 
 
 class RequestStream:

@@ -25,6 +25,7 @@ class ServeRequest:
     nfe: int = 0                       # batch steps while this row was live
     blocks_decoded: int = 0
     preempted: int = 0                 # times kicked back to the queue
+    eos_seen: bool = False             # a streamed chunk contained EOS
     host_syncs: int = 0                # device->host sync points attributed
     logit_syncs: int = 0               # ... of which full-logit copies
 
@@ -51,16 +52,22 @@ class BlockChunk:
 @dataclasses.dataclass
 class Completion:
     """Terminal record for a request (superset of the legacy
-    ``repro.core.engine.Completion`` field names)."""
+    ``repro.core.engine.Completion`` field names). ``tokens``/``text``
+    are trimmed to the *requested* ``max_tokens``, not the block-rounded
+    ``gen_len`` — network front ends must never over-return. Cancelled
+    requests (explicit cancel, client disconnect, deadline expiry)
+    carry whatever was committed before the cancel took effect."""
     uid: int
     text: str
-    tokens: np.ndarray                 # (gen_len,) EOS-truncated
+    tokens: np.ndarray                 # (<= max_tokens,) EOS-truncated
     latency_s: float                   # submit -> finish
     nfe: int
     ttfb_s: float = 0.0                # submit -> first block committed
     queue_s: float = 0.0               # submit -> admitted to a slot
     n_tokens: int = 0                  # non-EOS tokens generated
     n_blocks: int = 0
+    max_tokens: int = 0                # requested budget (pre-rounding)
+    cancelled: bool = False            # partial result: freed early
     host_syncs: int = 0                # host sync points while live
     logit_syncs: int = 0               # (B, K, V) logit copies while live
 

@@ -1,0 +1,280 @@
+"""HTTP front-end tests (`repro.server`) over real loopback sockets:
+round-trip identity with the in-process engine, SSE chunk ordering,
+bounded admission (429), deadline expiry → partial completion, client
+disconnect → slot release without disturbing concurrent requests, and
+graceful drain shutdown. Everything runs on the tiny config with the
+stdlib-only loopback client."""
+import asyncio
+import contextlib
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.decoder import DecodeConfig
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import get_config, init_params
+from repro.server import EngineLoop, HttpFrontend, ServerRequest
+from repro.server import client as C
+from repro.server.types import BadRequest
+from repro.serving import ContinuousEngine
+
+CFG = get_config("tiny")
+PARAMS = init_params(CFG, jax.random.PRNGKey(3))
+TOK = ByteTokenizer(CFG.vocab_size)
+PROMPT = "Q:12+34=? A:"
+PROMPT_B = "Q:56+11=? A:"          # same length -> same shape bucket
+TEST_TIMEOUT_S = 240
+
+
+def _dcfg(gen_len=16):
+    return DecodeConfig(method="streaming", gen_len=gen_len, block_size=8,
+                        window=8, early_exit=False)
+
+
+def _engine(gen_len=16, max_slots=4):
+    return ContinuousEngine(CFG, PARAMS, _dcfg(gen_len),
+                            max_slots=max_slots, tokenizer=TOK)
+
+
+_REF = {}
+
+
+def _reference(prompt, max_tokens, gen_len):
+    """In-process ContinuousEngine.run_to_completion() ground truth."""
+    key = (prompt, max_tokens, gen_len)
+    if key not in _REF:
+        eng = _engine(gen_len)
+        eng.submit(prompt, max_tokens=max_tokens)
+        _REF[key] = eng.run_to_completion()[0]
+    return _REF[key]
+
+
+@contextlib.asynccontextmanager
+async def _server(gen_len=16, max_slots=4, max_pending=16):
+    eng = _engine(gen_len, max_slots)
+    loop = EngineLoop(eng, max_pending=max_pending, idle_poll_s=0.005)
+    frontend = await HttpFrontend(loop, port=0).start()
+    try:
+        yield frontend, eng
+    finally:
+        await frontend.shutdown(drain=False, timeout_s=30)
+
+
+def _run(coro):
+    asyncio.run(asyncio.wait_for(coro, TEST_TIMEOUT_S))
+
+
+async def _await_idle(eng, loop, timeout_s=60.0):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout_s:
+        if eng.scheduler.idle and loop.inflight == 0:
+            return
+        await asyncio.sleep(0.01)
+    raise AssertionError("engine did not return to idle")
+
+
+# ------------------------------------------------------------ round trip
+
+
+def test_http_roundtrip_matches_engine():
+    """Acceptance: the HTTP JSON response carries exactly the tokens the
+    in-process engine produces for the same prompt/config."""
+    ref = _reference(PROMPT, 13, 16)
+
+    async def main():
+        async with _server() as (fe, eng):
+            status, _, doc = await C.complete(
+                fe.host, fe.port, {"prompt": PROMPT, "max_tokens": 13})
+            assert status == 200
+            assert doc["text"] == ref.text
+            assert doc["n_tokens"] == ref.n_tokens == 13
+            assert doc["max_tokens"] == 13          # never over-returns
+            assert doc["finish_reason"] in ("stop", "length")
+            assert not doc["cancelled"]
+    _run(main())
+
+
+def test_sse_stream_ordering_and_identity():
+    """Acceptance: SSE chunks arrive in block order and their joined
+    text equals the in-process Completion text; the stream ends with a
+    summary event and the [DONE] sentinel."""
+    ref = _reference(PROMPT, 13, 16)
+
+    async def main():
+        async with _server() as (fe, eng):
+            stream = await C.SSEStream.open(
+                fe.host, fe.port, {"prompt": PROMPT, "max_tokens": 13})
+            assert stream.status == 200
+            events = [e async for e in stream.events()]
+            await stream.close()
+            blocks = [e for e in events if "block" in e]
+            finals = [e for e in events if "finish_reason" in e]
+            assert [b["block"] for b in blocks] == \
+                list(range(len(blocks)))            # ordered, gapless
+            assert blocks[-1]["finished"]
+            assert len(finals) == 1
+            joined = "".join(b["text"] for b in blocks)
+            assert joined == ref.text == finals[0]["text"]
+    _run(main())
+
+
+# ------------------------------------------------------------ admission
+
+
+def test_429_on_full_admission_queue():
+    async def main():
+        async with _server(gen_len=32, max_pending=1) as (fe, eng):
+            stream = await C.SSEStream.open(
+                fe.host, fe.port, {"prompt": PROMPT, "max_tokens": 32})
+            # the stream's ticket is in flight -> the queue (depth 1)
+            # is full and the next request must bounce with Retry-After
+            status, headers, doc = await C.complete(
+                fe.host, fe.port, {"prompt": PROMPT, "max_tokens": 8})
+            assert status == 429
+            assert int(headers["retry-after"]) >= 1
+            assert "error" in doc
+            async for _ in stream.events():
+                pass
+            await stream.close()
+            await _await_idle(eng, fe.loop)
+            assert eng.metrics.admission_rejects == 1
+    _run(main())
+
+
+def test_bad_requests_are_400():
+    async def main():
+        async with _server() as (fe, eng):
+            for payload in ({}, {"prompt": 7}, {"prompt": ""},
+                            {"prompt": "x", "max_tokens": 0},
+                            {"prompt": "x", "bogus": 1},
+                            {"prompt": "x", "timeout_s": -1}):
+                status, _, doc = await C.complete(fe.host, fe.port, payload)
+                assert status == 400, payload
+                assert "error" in doc
+            status, _, body = await C.request(fe.host, fe.port, "GET",
+                                              "/nope")
+            assert status == 404
+            status, _, body = await C.request(fe.host, fe.port, "GET",
+                                              "/v1/completions")
+            assert status == 405
+    _run(main())
+
+
+# ------------------------------------------------------------ lifecycle
+
+
+def test_deadline_returns_partial_completion():
+    """timeout_s expiry cancels at a block boundary: the response is a
+    partial completion marked finish_reason=deadline, and the engine
+    counts the miss."""
+    async def main():
+        async with _server(gen_len=64) as (fe, eng):
+            status, _, doc = await C.complete(
+                fe.host, fe.port,
+                {"prompt": PROMPT, "max_tokens": 64, "timeout_s": 0.03})
+            assert status == 200
+            assert doc["cancelled"]
+            assert doc["finish_reason"] == "deadline"
+            assert doc["n_tokens"] < 64
+            await _await_idle(eng, fe.loop)
+            assert eng.metrics.deadline_misses == 1
+            assert eng.metrics.cancelled == 1
+    _run(main())
+
+
+def test_disconnect_mid_stream_releases_slot():
+    """Acceptance: a client that vanishes mid-stream frees its decode
+    slot (engine returns to idle) and concurrent requests' tokens are
+    untouched (bit-identical to a solo run)."""
+    ref_b = _reference(PROMPT_B, 32, 32)
+
+    async def main():
+        async with _server(gen_len=32) as (fe, eng):
+            sa = await C.SSEStream.open(
+                fe.host, fe.port, {"prompt": PROMPT, "max_tokens": 32})
+            sb = await C.SSEStream.open(
+                fe.host, fe.port, {"prompt": PROMPT_B, "max_tokens": 32})
+            events_b = []
+            it_b = sb.events()
+            events_b.append(await it_b.__anext__())   # both streams live
+            sa.abort()                                # client A vanishes
+            async for e in it_b:
+                events_b.append(e)
+            await sb.close()
+            finals = [e for e in events_b if "finish_reason" in e]
+            assert len(finals) == 1
+            assert not finals[0]["cancelled"]
+            assert finals[0]["text"] == ref_b.text    # B undisturbed
+            await _await_idle(eng, fe.loop)           # A's slot released
+            assert eng.metrics.cancelled == 1
+    _run(main())
+
+
+def test_graceful_drain_completes_inflight():
+    """shutdown(drain=True) closes the listener but lets the in-flight
+    request finish with a full (non-cancelled) response."""
+    async def main():
+        eng = _engine(gen_len=32)
+        frontend = await HttpFrontend(
+            EngineLoop(eng, max_pending=4, idle_poll_s=0.005),
+            port=0).start()
+        task = asyncio.create_task(C.complete(
+            frontend.host, frontend.port,
+            {"prompt": PROMPT, "max_tokens": 32}))
+        while not (frontend.loop.inflight or task.done()):
+            await asyncio.sleep(0.005)                # admitted
+        await frontend.shutdown(drain=True, timeout_s=60)
+        status, _, doc = await task
+        assert status == 200
+        assert not doc["cancelled"]
+        assert doc["n_tokens"] > 0
+        assert eng.scheduler.idle
+    _run(main())
+
+
+# ------------------------------------------------------------ observability
+
+
+def test_healthz_and_metrics():
+    async def main():
+        async with _server() as (fe, eng):
+            status, _, body = await C.request(fe.host, fe.port, "GET",
+                                              "/healthz")
+            assert status == 200
+            health = json.loads(body)
+            assert health["status"] == "ok" and health["idle"]
+            st, _, doc = await C.complete(
+                fe.host, fe.port, {"prompt": PROMPT, "max_tokens": 8})
+            assert st == 200
+            status, _, body = await C.request(fe.host, fe.port, "GET",
+                                              "/metrics")
+            assert status == 200
+            text = body.decode()
+            assert "repro_requests_total 1" in text
+            for metric in ("repro_admission_rejects_total",
+                           "repro_cancelled_total",
+                           "repro_deadline_misses_total",
+                           "repro_queue_depth",
+                           'repro_latency_seconds{quantile="0.99"}'):
+                assert metric in text, metric
+    _run(main())
+
+
+# ------------------------------------------------------------ validation
+
+
+def test_server_request_validation_unit():
+    ok = ServerRequest.from_json(
+        {"prompt": "x", "max_tokens": 3, "stream": True,
+         "timeout_s": 2, "priority": 5})
+    assert (ok.max_tokens, ok.stream, ok.timeout_s, ok.priority) == \
+        (3, True, 2.0, 5)
+    for bad in ([], {"prompt": "x", "max_tokens": True},
+                {"prompt": "x", "stream": "yes"},
+                {"prompt": "x", "priority": 1.5},
+                {"prompt": "x" * (ServerRequest.PROMPT_CAP + 1)}):
+        with pytest.raises(BadRequest):
+            ServerRequest.from_json(bad)

@@ -274,6 +274,80 @@ def test_preemption_resumes_exactly():
     assert (done[0].tokens == ref.tokens[0]).all()
 
 
+# ------------------------------------------------------------ cancellation
+
+
+def test_cancel_mid_gang_frees_slot_and_preserves_survivors():
+    """cancel(uid) on an active row releases the slot at the next
+    block boundary (before that tick's decode), yields a partial
+    cancelled Completion, and leaves every surviving row bit-identical
+    to an uncancelled run (the batch-invariance contract)."""
+    d = _dcfg("streaming", gen_len=32, early_exit=False)
+    ref = DiffusionDecoder(CFG, PARAMS, d).generate(PROMPTS.copy())
+    eng = ContinuousEngine(CFG, PARAMS, d, max_slots=4)
+    uids = [eng.submit(PROMPTS[b], max_tokens=32) for b in range(4)]
+    eng.step()                                  # block 0 at B=4
+    assert eng.scheduler.slots_used == 4
+    assert eng.cancel(uids[1]) is None          # active -> deferred
+    comps = eng.step()                          # cancel applies first
+    cancelled = [c for c in comps if c.cancelled]
+    assert [c.uid for c in cancelled] == [uids[1]]
+    assert cancelled[0].n_blocks == 1           # paid for exactly 1 block
+    assert len(cancelled[0].tokens) == 8        # the committed block only
+    assert eng.scheduler.slots_used == 3        # slot freed for good
+    comps += eng.run_to_completion()
+    done = {c.uid: c for c in comps}
+    for b in (0, 2, 3):                         # survivors untouched
+        assert (done[uids[b]].tokens == ref.tokens[b]).all()
+    assert (cancelled[0].tokens == ref.tokens[1][:8]).all()
+    assert eng.metrics.cancelled == 1
+
+
+def test_cancel_before_admit_drains_waiting_queue():
+    """Cancelling a request still in the waiting queue removes it
+    immediately (no slot ever consumed) and returns its empty
+    Completion synchronously."""
+    d = _dcfg("streaming", gen_len=16, early_exit=False)
+    eng = ContinuousEngine(CFG, PARAMS, d, max_slots=2)
+    uids = [eng.submit(PROMPTS[b], max_tokens=16) for b in range(3)]
+    eng.step()                                  # 2 admitted, 1 waiting
+    assert len(eng.scheduler.waiting) == 1
+    comp = eng.cancel(uids[2])
+    assert comp is not None and comp.cancelled and comp.n_tokens == 0
+    assert not eng.scheduler.waiting
+    rest = eng.run_to_completion()
+    assert sorted(c.uid for c in rest) == sorted(uids[:2])
+    assert not any(c.cancelled for c in rest)
+
+
+def test_cancel_unknown_or_finished_uid_is_noop():
+    eng = ContinuousEngine(CFG, PARAMS, _dcfg(), max_slots=2)
+    uid = eng.submit(PROMPTS[0], max_tokens=16)
+    assert eng.cancel(999) is None
+    assert not eng.scheduler._cancel            # no stale flag parked
+    done = eng.run_to_completion()
+    assert len(done) == 1 and not done[0].cancelled
+    assert eng.cancel(uid) is None              # finished: ignored
+    assert not eng.scheduler._cancel
+
+
+def test_completion_trims_to_requested_max_tokens():
+    """gen_len rounds max_tokens up to a block multiple; the surplus
+    must never leave the engine — neither in Completion.tokens/text nor
+    in the streamed chunk text."""
+    d = _dcfg("streaming", gen_len=16, early_exit=False)
+    eng = ContinuousEngine(CFG, PARAMS, d, max_slots=2)
+    uid = eng.submit(PROMPTS[0], max_tokens=11)   # rounds up to 16
+    got = []
+    eng.on_chunk(uid, got.append)
+    comp = eng.run_to_completion()[0]
+    assert comp.max_tokens == 11
+    assert len(comp.tokens) == 11 and comp.n_tokens <= 11
+    assert comp.text == TOK.decode(comp.tokens)
+    # chunk text: block 0 carries 8 tokens' text, block 1 only 3
+    assert "".join(c.text for c in got) == comp.text
+
+
 # ------------------------------------------------------------ streaming
 
 
@@ -311,6 +385,37 @@ def test_stream_router_unsubscribes_finished():
     from repro.serving.types import BlockChunk
     router.publish([BlockChunk(7, 0, np.zeros(2, np.int32), "", True, False)])
     assert 7 not in router._subs
+
+
+def test_stream_router_hygiene():
+    """Regression: a raising subscriber must not abort delivery to
+    later subscribers or later chunks (it is logged and dropped), and
+    emptied subscriber lists — per-uid and wildcard — are GC'd."""
+    from repro.serving.types import BlockChunk
+
+    def chunk(uid, finished=False):
+        return BlockChunk(uid, 0, np.zeros(1, np.int32), "", finished,
+                          False)
+
+    router = StreamRouter()
+    good, wild = [], []
+
+    def bad(c):
+        raise RuntimeError("boom")
+
+    router.subscribe(1, bad)
+    router.subscribe(1, good.append)
+    router.subscribe(None, wild.append)
+    router.publish([chunk(1), chunk(1)])
+    assert len(good) == 2 and len(wild) == 2    # bad didn't block anyone
+    assert bad not in router._subs.get(1, [])   # bad was dropped
+    # wildcard entry is GC'd once its last subscriber leaves
+    router.unsubscribe(None, wild.append)
+    assert None not in router._subs
+    # a raising wildcard-only subscriber leaves no empty list behind
+    router.subscribe(None, bad)
+    router.publish([chunk(2)])
+    assert None not in router._subs
 
 
 # ------------------------------------------------------------ metrics
