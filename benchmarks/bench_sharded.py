@@ -1,0 +1,186 @@
+"""Mesh-parallel serving benchmark: decode throughput vs data-shard
+count, and 1/2/4 engine loops behind one HTTP front end.
+
+    PYTHONPATH=src python benchmarks/bench_sharded.py \
+        [--quick] [--out results/BENCH_sharded.json]
+
+Forces 8 host devices (override via REPRO_XLA_FLAGS) so the whole
+matrix runs on CPU CI. Numbers on a host mesh measure *placement
+overhead*, not speedup — 8 fake devices share one physical CPU, so
+sharded decode is expected to be at best flat here; the benchmark's
+job is (a) proving the full executor/router path end to end at every
+shard count and (b) giving real accelerators a ready-made harness
+where the same JSON turns into a scaling curve.
+
+Two sections, both written to one JSON document:
+
+* ``decode_scaling`` — one DiffusionDecoder, batch 8, data shards
+  1/2/4 (executor=None is the 1-shard baseline): decode tok/s and
+  wall per block.
+* ``engine_scaling`` — 1/2/4 ``EngineLoop``s on disjoint single-device
+  submeshes behind one ``HttpFrontend``; closed-loop loopback clients;
+  client-observed p50/p99 latency, fleet tok/s, and the per-engine
+  request split from /metrics.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " " + os.environ.get(
+        "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=8"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import asyncio
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def bench_decode_scaling(cfg, params, dcfg, shards, batch, reps):
+    import jax
+    from repro.core.decoder import DiffusionDecoder
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import DecodeExecutor
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, 200, (batch, 10)).astype(np.int32)
+    out = []
+    for d in shards:
+        ex = (None if d == 1 else
+              DecodeExecutor(cfg, params, make_host_mesh(d, 1)))
+        dec = DiffusionDecoder(cfg, params if ex is None else None, dcfg,
+                               executor=ex)
+        dec.generate(prompts.copy())              # warmup + compile
+        t0 = time.perf_counter()
+        toks = blocks = 0
+        for _ in range(reps):
+            r = dec.generate(prompts.copy())
+            toks += r.tokens_generated
+            blocks += len(r.steps_per_block)
+        wall = time.perf_counter() - t0
+        rec = {"data_shards": d, "batch": batch,
+               "tok_per_s": round(toks / wall, 2),
+               "ms_per_block": round(1e3 * wall / max(blocks, 1), 2),
+               "devices": 1 if ex is None else len(ex.placement)}
+        print(f"  decode data={d}: {rec['tok_per_s']} tok/s "
+              f"({rec['ms_per_block']} ms/block)")
+        out.append(rec)
+    return out
+
+
+async def _closed_loop(host, port, clients, per_client, max_tokens):
+    from repro.server import client as C
+
+    lat = []
+
+    async def one_client(i):
+        for j in range(per_client):
+            t0 = time.perf_counter()
+            status, _, doc = await C.complete(
+                host, port, {"prompt": f"Q:{i}{j}+{j}{i}=? A:",
+                             "max_tokens": max_tokens})
+            assert status == 200, status
+            lat.append(time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    await asyncio.gather(*[one_client(i) for i in range(clients)])
+    wall = time.perf_counter() - t0
+    return lat, wall
+
+
+def bench_engine_scaling(cfg, params, dcfg, engine_counts, clients,
+                         per_client, max_tokens):
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.launch.mesh import make_submeshes
+    from repro.serving import ContinuousEngine, DecodeExecutor, percentile
+    from repro.server import EngineLoop, EngineRouter, HttpFrontend
+
+    tok = ByteTokenizer(cfg.vocab_size)
+    out = []
+    for n in engine_counts:
+        meshes = make_submeshes(n, 1, 1)
+        engines = [ContinuousEngine(
+            cfg, params, dcfg, max_slots=4, tokenizer=tok,
+            executor=DecodeExecutor(cfg, params, m)) for m in meshes]
+        loops = [EngineLoop(e, max_pending=64, idle_poll_s=0.002)
+                 for e in engines]
+        front = loops[0] if n == 1 else EngineRouter(loops)
+
+        async def run(front=front, engines=engines, n=n):
+            fe = await HttpFrontend(front, port=0).start()
+            try:
+                lat, wall = await _closed_loop(
+                    fe.host, fe.port, clients, per_client, max_tokens)
+                served = [len(e.metrics.requests) for e in engines]
+                toks = sum(e.metrics.total_tokens for e in engines)
+                return {"engines": n, "clients": clients,
+                        "requests": clients * per_client,
+                        "tok_per_s": round(toks / wall, 2),
+                        "latency_p50_ms": round(
+                            1e3 * percentile(lat, 50), 1),
+                        "latency_p99_ms": round(
+                            1e3 * percentile(lat, 99), 1),
+                        "per_engine_requests": served}
+            finally:
+                await fe.shutdown(drain=False, timeout_s=30)
+
+        rec = asyncio.run(run())
+        print(f"  engines={n}: {rec['tok_per_s']} tok/s "
+              f"p50={rec['latency_p50_ms']}ms "
+              f"p99={rec['latency_p99_ms']}ms "
+              f"split={rec['per_engine_requests']}")
+        out.append(rec)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer shard counts and requests")
+    ap.add_argument("--out", default="results/BENCH_sharded.json")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.core.decoder import DecodeConfig
+    from repro.models import get_config, init_params
+
+    cfg = get_config("tiny")
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    dcfg = DecodeConfig(method="streaming", gen_len=32, block_size=8,
+                        window=16)
+
+    shards = (1, 2) if args.quick else (1, 2, 4)
+    engine_counts = (1, 2) if args.quick else (1, 2, 4)
+    clients = 2 if args.quick else 4
+    per_client = 2 if args.quick else 4
+
+    print(f"devices={len(jax.devices())} backend={jax.default_backend()}")
+    print("== decode throughput vs data shards ==")
+    decode = bench_decode_scaling(cfg, params, dcfg, shards, batch=8,
+                                  reps=1 if args.quick else 3)
+    print("== engine loops behind one front end ==")
+    engines = bench_engine_scaling(cfg, params, dcfg, engine_counts,
+                                   clients, per_client, max_tokens=16)
+
+    doc = {"arch": cfg.name, "method": dcfg.method,
+           "n_devices": len(jax.devices()),
+           "backend": jax.default_backend(),
+           "note": ("host-mesh CPU run: measures placement overhead and "
+                    "proves the sharded path; real scaling needs real "
+                    "chips"),
+           "decode_scaling": decode, "engine_scaling": engines}
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,8 @@
 #                                # Pallas-routed continuous-serve smoke
 #   scripts/test.sh server       # HTTP front-end tests (loopback round
 #                                # trip, SSE, 429, deadlines, disconnect)
+#   scripts/test.sh sharded      # mesh-parallel decode suite (forced
+#                                # 8-device host mesh) + sharded bench
 #   scripts/test.sh all          # suite + smoke
 #
 # Tests run on the single real CPU device; the dry-run subprocesses set
@@ -49,10 +51,24 @@ run_server() {
     python -m pytest -x -q tests/test_server.py
 }
 
+run_sharded() {
+    # mesh-parallel gang decode: the pytest file drives a subprocess
+    # that forces an 8-device host mesh (the flag must never be set in
+    # the main pytest process — see tests/conftest.py), then the
+    # sharded bench exercises 1/2-engine routing over real sockets
+    python -m pytest -x -q tests/test_sharded_decode.py
+    echo "== bench_sharded --quick (8 forced host devices) =="
+    # the bench sets its own device-count flag (REPRO_XLA_FLAGS to
+    # override) — don't clobber a developer's ambient XLA_FLAGS here
+    python benchmarks/bench_sharded.py --quick \
+        --out results/BENCH_sharded_quick.json
+}
+
 case "${1:-suite}" in
     smoke)   run_smoke ;;
     kernels) run_kernels ;;
     server)  run_server ;;
+    sharded) run_sharded ;;
     all)     run_suite; run_smoke ;;
     suite)   run_suite ;;
     *)       run_suite "$@" ;;

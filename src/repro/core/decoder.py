@@ -182,13 +182,35 @@ class DiffusionDecoder:
     (legacy) or one compiled device-resident loop per block (fused)."""
 
     def __init__(self, cfg: ModelConfig, params, dcfg: DecodeConfig,
-                 mesh=None, data_axes=("data",)):
+                 mesh=None, data_axes=("data",), executor=None):
         self.cfg = cfg
-        self.params = params
         self.dcfg = dcfg
-        self.mesh = mesh
-        self.data_axes = data_axes
+        self.executor = executor
+        if executor is not None:
+            # the placement layer owns the placed params and the mesh;
+            # a decoder bound to an executor never touches raw params
+            self.params = executor.params
+            self.mesh = executor.mesh
+            self.data_axes = executor.data_axes
+        else:
+            self.params = params
+            self.mesh = mesh
+            self.data_axes = data_axes
         self._fns: Dict[Any, Any] = {}
+
+    # ----------------------------------------------- placement boundary
+
+    def _put_batch(self, arr):
+        """Host -> device for a gang-shaped array (dim 0 = batch):
+        data-axis sharded via the executor, plain upload without one."""
+        if self.executor is None:
+            return jnp.asarray(arr)
+        return self.executor.put_batch(arr)
+
+    def _alloc_cache(self, batch: int, total_len: int):
+        if self.executor is None:
+            return init_cache(self.cfg, batch, total_len)
+        return self.executor.init_cache(batch, total_len)
 
     # ------------------------------------------------------ shared pieces
 
@@ -401,14 +423,15 @@ class DiffusionDecoder:
                     assert scan[0].shape[2] == T, (scan[0].shape, T)
             state.cache = cache
         else:
-            state.cache = init_cache(cfg, B, T)
+            state.cache = self._alloc_cache(B, T)
         if d.method == "dkv":
             # dKV prefill: one full-sequence pass (prompt + masks),
             # position-indexed cache; only the prompt KV is valid.
             tp0 = time.perf_counter()
-            pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+            pos = self._put_batch(
+                np.broadcast_to(np.arange(T, dtype=np.int32)[None], (B, T)))
             state.cache, _ = self._prefill_fn()(self.params,
-                                                jnp.asarray(x), pos,
+                                                self._put_batch(x), pos,
                                                 state.cache)
             jax.block_until_ready(jax.tree.leaves(state.cache)[0])
             state.prefill_time = time.perf_counter() - tp0
@@ -439,6 +462,10 @@ class DiffusionDecoder:
             n_blocks=state.n_blocks, block_idx=state.block_idx,
             steps_per_block=list(state.steps_per_block))
         if d.method == "dkv":
+            # cache_take_rows *gathers* (XLA copies) — the sub-state
+            # must never alias buffers of the gang it left: the gang's
+            # next fused call may donate them, and a pooled buffer may
+            # be handed to another gang while this state is parked
             sub.cache = cache_take_rows(state.cache, rows)
             sub.valid_mask = state.valid_mask[rows].copy()
             sub.cached_mask = state.cached_mask[rows].copy()
@@ -446,7 +473,38 @@ class DiffusionDecoder:
             if cache is not None:
                 sub.cache = cache
             elif alloc_cache:
-                sub.cache = init_cache(self.cfg, len(rows), state.total_len)
+                sub.cache = self._alloc_cache(len(rows), state.total_len)
+        return sub
+
+    def merge_rows(self, parts, cache: Any = None) -> DecodeState:
+        """Fuse rows from several states sitting at the SAME block
+        boundary into one state (the scheduler's cross-gang straggler
+        merge). ``parts`` is a list of ``(state, rows)``. Requires
+        ``batch_invariant`` (per-row results don't depend on batching)
+        and excludes dkv, whose cache carries across blocks; for every
+        other cached method the next block refresh rewrites the cache,
+        so any right-shaped buffer (``cache``) serves as backing."""
+        assert self.batch_invariant and self.dcfg.method != "dkv"
+        ref = parts[0][0]
+        for st, _ in parts[1:]:
+            assert (st.prompt_len, st.n_blocks, st.block_idx) == \
+                (ref.prompt_len, ref.n_blocks, ref.block_idx), \
+                "cross-gang merge requires identical (bucket, block) state"
+        sub = DecodeState(
+            x=np.concatenate([st.x[rows] for st, rows in parts]),
+            committed=np.concatenate(
+                [st.committed[rows] for st, rows in parts]),
+            done=np.concatenate([st.done[rows] for st, rows in parts]),
+            prompt_len=ref.prompt_len, n_blocks=ref.n_blocks,
+            block_idx=ref.block_idx,
+            # per-block step counts diverge across source gangs; keep
+            # the elementwise max (metrics-only, like take_rows' copy)
+            steps_per_block=[max(vals) for vals in zip(
+                *(st.steps_per_block for st, _ in parts))]
+            if ref.steps_per_block else [])
+        if self.dcfg.method != "vanilla":
+            sub.cache = cache if cache is not None \
+                else self._alloc_cache(sub.batch, ref.total_len)
         return sub
 
     def row_output(self, state: DecodeState, b: int):
@@ -686,7 +744,16 @@ class DiffusionDecoder:
             return (x, committed, done, steps, n_hit, cache,
                     valid_mask, cached_mask, vsums)
 
-        self._fns["fused"] = jax.jit(f, static_argnames=("bstart",))
+        # The fused fn consumes and rewrites the whole cache for every
+        # cached method, so its input buffer is dead on entry — donate
+        # it where the backend honors donation (executor policy),
+        # halving peak KV memory per gang. Never for vanilla (cache is
+        # an empty pytree) and never for the host-oracle default path.
+        donate = (4,) if (self.executor is not None
+                          and self.executor.donate_cache
+                          and d.method != "vanilla") else ()
+        self._fns["fused"] = jax.jit(f, static_argnames=("bstart",),
+                                     donate_argnums=donate)
         return self._fns["fused"]
 
     def _decode_block_fused(self, state: DecodeState) -> DecodeState:
@@ -704,13 +771,15 @@ class DiffusionDecoder:
         bstart = region.block_start
         prefix_len = bstart
 
-        vm = None if state.valid_mask is None else jnp.asarray(state.valid_mask)
+        vm = None if state.valid_mask is None \
+            else self._put_batch(state.valid_mask)
         cm = None if state.cached_mask is None \
-            else jnp.asarray(state.cached_mask)
+            else self._put_batch(state.cached_mask)
         (x, committed, done, steps, n_hit, cache, vm, cm,
          vsums) = self._fused_fn()(
-            self.params, jnp.asarray(state.x), jnp.asarray(state.committed),
-            jnp.asarray(state.done), state.cache, jnp.asarray(qpos_b),
+            self.params, self._put_batch(state.x),
+            self._put_batch(state.committed), self._put_batch(state.done),
+            state.cache, self._put_batch(qpos_b),
             vm, cm, bstart=bstart)
 
         # the ONE host sync for this block (np.array: writable copies —
@@ -789,18 +858,19 @@ class DiffusionDecoder:
             if d.method == "vanilla":
                 q_tokens += B * T
                 logits = self._encode_fn()(
-                    self.params, jnp.asarray(x),
-                    jnp.broadcast_to(jnp.arange(T)[None], (B, T)))
+                    self.params, self._put_batch(x),
+                    self._put_batch(np.broadcast_to(
+                        np.arange(T, dtype=np.int32)[None], (B, T))))
                 blk_logits = logits[:, bstart:bend]
                 kv_tokens += B * T * T
             elif d.method == "dkv":
                 q_tokens += B * Sq
-                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
-                mix = jnp.asarray(
+                q_toks = self._put_batch(x[np.arange(B)[:, None], qpos_b])
+                mix = self._put_batch(
                     cached_mask[np.arange(B)[:, None], qpos_b])
                 logits, cache = self._dkv_step_fn()(
-                    self.params, q_toks, jnp.asarray(qpos_b), cache,
-                    jnp.asarray(valid_mask), mix)
+                    self.params, q_toks, self._put_batch(qpos_b), cache,
+                    self._put_batch(valid_mask), mix)
                 blk_logits = logits[:, :K]
                 # tokens committed earlier (whose fresh KV this step
                 # was decoded-input based) are now frozen
@@ -817,27 +887,27 @@ class DiffusionDecoder:
                     [np.arange(prefix_len, dtype=np.int32), qpos])
                 full_pos = np.broadcast_to(full_pos[None],
                                            (B, prefix_len + Sq))
-                full_toks = jnp.asarray(
+                full_toks = self._put_batch(
                     x[np.arange(B)[:, None], full_pos])
                 if frozen:
                     cf, tk, cache = self._frozen_refresh_ct_fn()(
-                        self.params, full_toks, jnp.asarray(full_pos),
+                        self.params, full_toks, self._put_batch(full_pos),
                         cache, upto=prefix_len)
                     conf_toks = (cf, tk)
                     vb = np.zeros((B, T), bool)
                     vb[:, :prefix_len] = True
                     for pp in qpos[K:]:
                         vb[:, pp] = True
-                    valid = jnp.asarray(vb)
+                    valid = self._put_batch(vb)
                 elif d.parallel:
                     cf, tk, cache = self._refresh_ct_fn()(
-                        self.params, full_toks, jnp.asarray(full_pos),
+                        self.params, full_toks, self._put_batch(full_pos),
                         cache, upto=prefix_len)
                     conf_toks = (cf, tk)
                     valid = jnp.full((B,), prefix_len, jnp.int32)
                 else:
                     logits, cache = self._refresh_fn()(
-                        self.params, full_toks, jnp.asarray(full_pos),
+                        self.params, full_toks, self._put_batch(full_pos),
                         cache, upto=prefix_len)
                     blk_logits = logits[:, prefix_len:prefix_len + K]
                     valid = jnp.full((B,), prefix_len, jnp.int32)
@@ -847,21 +917,21 @@ class DiffusionDecoder:
                 bpos = np.broadcast_to(
                     np.arange(bstart, bend, dtype=np.int32)[None], (B, K))
                 conf_toks = self._step_ct_fn()(
-                    self.params, jnp.asarray(x[:, bstart:bend]),
-                    jnp.asarray(bpos), cache, valid)
+                    self.params, self._put_batch(x[:, bstart:bend]),
+                    self._put_batch(bpos), cache, valid)
                 kv_tokens += B * K * (prefix_len + Sq + K)
             elif d.parallel:
                 q_tokens += B * Sq
-                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
+                q_toks = self._put_batch(x[np.arange(B)[:, None], qpos_b])
                 conf_toks = self._step_ct_fn()(
-                    self.params, q_toks, jnp.asarray(qpos_b), cache,
+                    self.params, q_toks, self._put_batch(qpos_b), cache,
                     valid)
                 kv_tokens += B * Sq * (prefix_len + Sq)
             else:
                 q_tokens += B * Sq
-                q_toks = jnp.asarray(x[np.arange(B)[:, None], qpos_b])
+                q_toks = self._put_batch(x[np.arange(B)[:, None], qpos_b])
                 logits = self._step_fn()(
-                    self.params, q_toks, jnp.asarray(qpos_b), cache,
+                    self.params, q_toks, self._put_batch(qpos_b), cache,
                     valid)
                 blk_logits = logits[:, :K]
                 kv_tokens += B * Sq * (prefix_len + Sq)

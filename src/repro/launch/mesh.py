@@ -44,3 +44,21 @@ def make_host_mesh(data: int = 1, model: int = 1):
 
 def data_axes_of(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_submeshes(n: int, data: int = 1, model: int = 1, devices=None):
+    """Split the device set into ``n`` disjoint (data, model) meshes —
+    one per serving engine (``repro.server.EngineRouter``). Contiguous
+    device slices so each submesh stays within its natural locality
+    domain (a TPU slice; adjacent fake host devices in CI)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(devices if devices is not None else jax.devices())
+    per = data * model
+    if len(devs) < n * per:
+        raise ValueError(
+            f"need {n} x {data}x{model} = {n * per} devices, "
+            f"have {len(devs)}")
+    return [Mesh(np.array(devs[i * per:(i + 1) * per]).reshape(data, model),
+                 ("data", "model")) for i in range(n)]

@@ -11,12 +11,27 @@ or serve over HTTP (SSE streaming, /healthz, /metrics):
     PYTHONPATH=src python -m repro.launch.serve --arch tiny --http 8000
     curl -N localhost:8000/v1/completions \
         -d '{"prompt": "Q:12+34=? A:", "max_tokens": 16, "stream": true}'
+
+or mesh-parallel / multi-engine (one EngineLoop per submesh, requests
+routed least-loaded; on CPU use --force-host-devices to fake chips):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tiny --http 8000 \
+        --mesh 2,1 --engines 2 --force-host-devices 4
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
+
+
+def _parse_mesh(s: str):
+    try:
+        data, model = (int(v) for v in s.split(","))
+    except ValueError:
+        raise SystemExit(f"--mesh wants 'data,model' ints, got {s!r}")
+    return data, model
 
 
 def main():
@@ -51,7 +66,36 @@ def main():
     ap.add_argument("--max-pending", type=int, default=64,
                     help="HTTP mode: bounded admission queue; beyond "
                          "this, POSTs get 429 + Retry-After")
+    ap.add_argument("--mesh", default="", metavar="DATA,MODEL",
+                    help="per-engine mesh dims, e.g. 2,2: batch shards "
+                         "over the data axis, attention/FFN over model "
+                         "(DecodeExecutor placement layer); empty = "
+                         "single-device")
+    ap.add_argument("--engines", type=int, default=1, metavar="N",
+                    help="engine loops, one per disjoint submesh, "
+                         "behind one HTTP front end (least-loaded "
+                         "routing; HTTP mode only for N > 1)")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="fake this many host devices via XLA_FLAGS "
+                         "(CI/demo; must be >= engines * data * model)")
     args = ap.parse_args()
+
+    # flag validation up front — nothing below may cost the user a
+    # training run or N param placements before a SystemExit
+    if args.engines > 1 and not args.http:
+        raise SystemExit("--engines N > 1 needs --http (the router lives "
+                         "in the HTTP front end)")
+    if args.mesh and not args.http and args.mode != "continuous":
+        raise SystemExit("--mesh needs continuous mode or --http (the "
+                         "placement layer drives the continuous engine; "
+                         "the legacy batch engine is single-device)")
+    mesh_dims = _parse_mesh(args.mesh) if args.mesh else None
+
+    if args.force_host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count="
+            f"{args.force_host_devices}")
 
     import jax
     from repro.core.decoder import DecodeConfig
@@ -61,6 +105,17 @@ def main():
     from repro.models import get_config, init_params
     from repro.training import checkpoint
     from repro.training.train import TrainConfig, train
+
+    if mesh_dims is not None:
+        # jax is up: the device-count precondition costs nothing to
+        # check here, and failing inside make_submeshes would waste a
+        # checkpoint restore or a whole training run first
+        need = args.engines * mesh_dims[0] * mesh_dims[1]
+        if len(jax.devices()) < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} x --engines {args.engines} needs "
+                f"{need} devices, have {len(jax.devices())} "
+                f"(--force-host-devices {need} fakes them on CPU)")
 
     cfg = get_config(args.arch, block_size=8)
     if args.ckpt:
@@ -73,20 +128,33 @@ def main():
                      window=args.window, tau0=args.tau0, alpha=args.alpha,
                      use_kernels=args.use_kernels, fused=not args.host_loop)
     tok = ByteTokenizer(cfg.vocab_size)
-    if args.http:
+
+    # placement: one DecodeExecutor per engine submesh (None = today's
+    # single-device path); params are placed per mesh, caches are born
+    # sharded, gang batches shard over the data axis
+    executors = [None] * args.engines
+    if mesh_dims is not None:
+        from repro.launch.mesh import make_submeshes
+        from repro.serving import DecodeExecutor
+        executors = [DecodeExecutor(cfg, params, m)
+                     for m in make_submeshes(args.engines, *mesh_dims)]
+
+    def make_engine(ex):
         from repro.serving import ContinuousEngine
+        return ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
+                                tokenizer=tok, executor=ex)
+
+    if args.http:
         from repro.server import run as run_http
-        eng = ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
-                               tokenizer=tok)
-        run_http(eng, host=args.http_host, port=args.http,
+        engines = [make_engine(ex) for ex in executors]
+        run_http(engines if len(engines) > 1 else engines[0],
+                 host=args.http_host, port=args.http,
                  max_pending=args.max_pending)
         return
     ds = ArithmeticDataset(tok, seq_len=44)
     samples = ds.eval_set(args.n)
     if args.mode == "continuous":
-        from repro.serving import ContinuousEngine
-        eng = ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
-                               tokenizer=tok)
+        eng = make_engine(executors[0])
         for s in samples:
             eng.submit(s.prompt, max_tokens=args.gen_len)
         if args.stream:
@@ -107,6 +175,7 @@ def main():
               f"p99={snap['latency_p99_s']*1e3:.0f}ms "
               f"ttfb_p50={snap['ttfb_p50_s']*1e3:.0f}ms "
               f"occ={snap['mean_occupancy']:.2f} "
+              f"merges={snap['gang_merges']} "
               f"syncs/blk={snap['host_syncs_per_block']:.2f} "
               f"steps/blk={snap['device_steps_per_block']:.2f} "
               f"jit_cache={eng.jit_cache_size()}")

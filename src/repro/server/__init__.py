@@ -5,6 +5,9 @@ Layering (top of the ``repro.serving`` stack):
     HttpFrontend   — hand-rolled HTTP/1.1 + SSE on asyncio streams:
                      POST /v1/completions, GET /healthz, GET /metrics,
                      429 + Retry-After admission, graceful drain
+    EngineRouter   — N EngineLoops (one per device/mesh) behind one
+                     front end; least-loaded-by-live-rows placement,
+                     cross-engine admission fallback
     EngineLoop     — the dedicated decode thread that owns
                      ``ContinuousEngine`` and the only thread-safe
                      submit/cancel surface; enforces deadlines
@@ -20,11 +23,12 @@ see EXPERIMENTS.md for the decision record.
 """
 from repro.server.http import HttpFrontend, run, serve
 from repro.server.loop import EngineLoop, Ticket
+from repro.server.router import EngineRouter
 from repro.server.types import (AdmissionRejected, BadRequest,
                                 ServerError, ServerRequest, finish_reason)
 
 __all__ = [
-    "HttpFrontend", "EngineLoop", "Ticket", "ServerRequest",
-    "ServerError", "BadRequest", "AdmissionRejected", "finish_reason",
-    "serve", "run",
+    "HttpFrontend", "EngineLoop", "EngineRouter", "Ticket",
+    "ServerRequest", "ServerError", "BadRequest", "AdmissionRejected",
+    "finish_reason", "serve", "run",
 ]

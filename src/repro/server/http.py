@@ -40,10 +40,17 @@ log = logging.getLogger(__name__)
 
 
 class HttpFrontend:
-    def __init__(self, engine_loop: EngineLoop, host: str = "127.0.0.1",
+    """Accepts either a single ``EngineLoop`` or an ``EngineRouter``
+    over several (one per device/mesh) — the router exposes the same
+    submit/cancel surface, so all routes below are engine-count
+    agnostic; only /healthz and /metrics fan in across engines."""
+
+    def __init__(self, engine_loop, host: str = "127.0.0.1",
                  port: int = 8000, request_timeout_s: float = 10.0):
-        self.loop = engine_loop
-        self.engine = engine_loop.engine
+        self.loop = engine_loop                       # loop OR router
+        self.engines = getattr(engine_loop, "engines",
+                               None) or [engine_loop.engine]
+        self.engine = self.engines[0]                 # 1-engine alias
         self.host = host
         self.port = port
         self.request_timeout_s = request_timeout_s   # header-read budget
@@ -262,15 +269,34 @@ class HttpFrontend:
     # ------------------------------------------------------ health/metrics
 
     def _health(self) -> dict:
-        sched = self.engine.scheduler
+        scheds = [e.scheduler for e in self.engines]
         return {"status": "draining" if self._draining else "ok",
+                "engines": len(self.engines),
                 "inflight": self.loop.inflight,
-                "queue_depth": self.engine.metrics.queue_depth,
-                "live_rows": sched.live_rows,
-                "idle": sched.idle}
+                "queue_depth": sum(e.metrics.queue_depth
+                                   for e in self.engines),
+                "live_rows": sum(s.live_rows for s in scheds),
+                "idle": all(s.idle for s in scheds)}
 
     def _metrics_text(self) -> str:
-        snap = self.engine.metrics.snapshot()
+        """Prometheus text. Top-level series aggregate over every
+        engine (sums; occupancy wall-time-weighted; quantiles pooled
+        over the raw per-request records, since percentiles don't
+        average). Per-engine breakdowns live under a separate
+        ``repro_engine_*`` family with an ``engine`` label — same
+        family as the aggregate would double-count on scrape."""
+        from repro.serving.metrics import percentile
+        snaps = [e.metrics.snapshot() for e in self.engines]
+
+        def tot(key):
+            return sum(s[key] for s in snaps)
+
+        wall = max(sum(s["wall_time_s"] for s in snaps), 1e-9)
+        occ = sum(s["mean_occupancy"] * s["wall_time_s"]
+                  for s in snaps) / wall
+        # engines decode concurrently: fleet tok/s is the sum of each
+        # engine's tokens over its own scheduler wall time
+        tput = sum(s["throughput_tok_s"] for s in snaps)
         out = []
 
         def emit(name, value, mtype, help_text):
@@ -278,47 +304,88 @@ class HttpFrontend:
             out.append(f"# TYPE {name} {mtype}")
             out.append(f"{name} {value}")
 
-        emit("repro_requests_total", snap["requests"], "counter",
+        emit("repro_requests_total", tot("requests"), "counter",
              "Completed requests (including cancelled).")
-        emit("repro_tokens_total", snap["tokens"], "counter",
+        emit("repro_tokens_total", tot("tokens"), "counter",
              "Generated tokens across completed requests.")
-        emit("repro_nfe_total", snap["total_nfe"], "counter",
+        emit("repro_nfe_total", tot("total_nfe"), "counter",
              "Model forward evaluations.")
-        emit("repro_admission_rejects_total", snap["admission_rejects"],
+        emit("repro_admission_rejects_total", tot("admission_rejects"),
              "counter", "Requests rejected with 429 (queue full).")
-        emit("repro_cancelled_total", snap["cancelled"], "counter",
+        emit("repro_cancelled_total", tot("cancelled"), "counter",
              "Requests cancelled (explicit, disconnect, or deadline).")
-        emit("repro_deadline_misses_total", snap["deadline_misses"],
+        emit("repro_deadline_misses_total", tot("deadline_misses"),
              "counter", "Cancelled requests whose cause was timeout_s.")
-        emit("repro_queue_depth", snap["queue_depth"], "gauge",
+        emit("repro_gang_merges_total", tot("gang_merges"), "counter",
+             "Cross-gang straggler merges at block boundaries.")
+        emit("repro_queue_depth", tot("queue_depth"), "gauge",
              "Requests queued (front end + scheduler), not in a slot.")
         emit("repro_inflight", self.loop.inflight, "gauge",
              "Requests admitted and not yet finished.")
-        emit("repro_mean_occupancy", f"{snap['mean_occupancy']:.6f}",
-             "gauge", "Mean decode-slot occupancy.")
-        emit("repro_throughput_tok_per_s",
-             f"{snap['throughput_tok_s']:.6f}", "gauge",
+        emit("repro_engines", len(self.engines), "gauge",
+             "Engine loops behind this front end.")
+        emit("repro_mean_occupancy", f"{occ:.6f}",
+             "gauge", "Mean decode-slot occupancy (wall-time weighted).")
+        emit("repro_throughput_tok_per_s", f"{tput:.6f}", "gauge",
              "Generated tokens per second of scheduler wall time.")
         for metric, key in (("repro_latency_seconds", "latency"),
                             ("repro_ttfb_seconds", "ttfb")):
-            out.append(f"# HELP {metric} Request {key} quantiles.")
+            vals = [getattr(r, f"{key}_s")
+                    for e in self.engines for r in e.metrics.requests]
+            out.append(f"# HELP {metric} Request {key} quantiles "
+                       "(pooled across engines).")
             out.append(f"# TYPE {metric} summary")
-            for q, snap_key in (("0.5", f"{key}_p50_s"),
-                                ("0.99", f"{key}_p99_s")):
+            for q, pct in (("0.5", 50), ("0.99", 99)):
                 out.append(f'{metric}{{quantile="{q}"}} '
-                           f"{snap[snap_key]:.6f}")
+                           f"{percentile(vals, pct):.6f}")
+        if len(self.engines) > 1:
+            for name, key, mtype, help_text, fmt in (
+                    ("requests_total", "requests", "counter",
+                     "Completed requests per engine.", "{}"),
+                    ("tokens_total", "tokens", "counter",
+                     "Generated tokens per engine.", "{}"),
+                    ("gang_merges_total", "gang_merges", "counter",
+                     "Cross-gang merges per engine.", "{}"),
+                    ("throughput_tok_per_s", "throughput_tok_s", "gauge",
+                     "Tokens/s per engine.", "{:.6f}"),
+                    ("mean_occupancy", "mean_occupancy", "gauge",
+                     "Decode-slot occupancy per engine.", "{:.6f}")):
+                out.append(f"# HELP repro_engine_{name} {help_text}")
+                out.append(f"# TYPE repro_engine_{name} {mtype}")
+                for i, s in enumerate(snaps):
+                    out.append(f'repro_engine_{name}{{engine="{i}"}} '
+                               + fmt.format(s[key]))
+            out.append("# HELP repro_engine_live_rows Live decode rows "
+                       "per engine.")
+            out.append("# TYPE repro_engine_live_rows gauge")
+            for i, e in enumerate(self.engines):
+                out.append(f'repro_engine_live_rows{{engine="{i}"}} '
+                           f"{e.scheduler.live_rows}")
         return "\n".join(out) + "\n"
+
+
+def _front(engines, max_pending: int):
+    """One EngineLoop per engine; >1 engine routes through
+    ``EngineRouter`` (least-loaded by live rows)."""
+    engines = engines if isinstance(engines, (list, tuple)) else [engines]
+    loops = [EngineLoop(e, max_pending=max_pending) for e in engines]
+    if len(loops) == 1:
+        return loops[0]
+    from repro.server.router import EngineRouter
+    return EngineRouter(loops)
 
 
 async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
                 max_pending: int = 64) -> None:
-    """Run the HTTP front end until cancelled, then drain gracefully."""
-    frontend = HttpFrontend(EngineLoop(engine, max_pending=max_pending),
+    """Run the HTTP front end until cancelled, then drain gracefully.
+    ``engine`` may be one ``ContinuousEngine`` or a list (one per
+    device/mesh; requests are routed least-loaded)."""
+    frontend = HttpFrontend(_front(engine, max_pending),
                             host=host, port=port)
     await frontend.start()
     print(f"repro.server listening on http://{frontend.host}:"
           f"{frontend.port}  (POST /v1/completions, GET /healthz, "
-          f"GET /metrics)")
+          f"GET /metrics; engines={len(frontend.engines)})")
     try:
         await frontend.serve_forever()
     except asyncio.CancelledError:

@@ -59,6 +59,7 @@ class Ticket:
         self.uid: Optional[int] = None
         self.done = False
         self.cancel_reason: Optional[str] = None
+        self.loop = None          # owning EngineLoop (set by EngineRouter)
 
     def _emit(self, event: Event) -> None:
         try:
@@ -101,23 +102,32 @@ class EngineLoop:
         return self
 
     def submit(self, req: ServerRequest,
-               deliver: Callable[[Event], None]) -> Ticket:
+               deliver: Callable[[Event], None],
+               count_reject: bool = True) -> Ticket:
         """Admit or reject *synchronously*; never blocks on the engine.
         The bounded budget covers everything submitted but unfinished
         (front-end queue + scheduler queue + decoding rows).
 
-        Counter ownership: ``admission_rejects`` is written only here,
-        under ``_lock`` (the decode thread pre-checks ``max_waiting``
-        in ``_feed`` so the engine-side increment never fires);
-        ``cancelled``/``deadline_misses`` are written only by the
-        decode thread. One writer per counter — no torn updates."""
+        ``count_reject=False`` raises without touching the rejection
+        counter — the multi-engine router spills a rejected request to
+        a peer engine, and a spill that gets *served* is not a 429; the
+        router counts exactly once when every engine rejects.
+
+        Counter ownership: ``admission_rejects`` is written only here
+        and in ``count_admission_reject``, under ``_lock`` (the decode
+        thread pre-checks ``max_waiting`` in ``_feed`` so the
+        engine-side increment never fires); ``cancelled``/
+        ``deadline_misses`` are written only by the decode thread. One
+        writer per counter — no torn updates."""
         with self._lock:
             if self._stop.is_set():
-                self.engine.metrics.admission_rejects += 1
+                if count_reject:
+                    self.engine.metrics.admission_rejects += 1
                 raise AdmissionRejected("server is shutting down",
                                         retry_after_s=5.0)
             if self._inflight >= self.max_pending:
-                self.engine.metrics.admission_rejects += 1
+                if count_reject:
+                    self.engine.metrics.admission_rejects += 1
                 raise AdmissionRejected(
                     f"admission queue full ({self.max_pending} in flight)",
                     retry_after_s=1.0)
@@ -126,20 +136,35 @@ class EngineLoop:
         self._cmds.put(("submit", ticket, None))
         return ticket
 
+    def count_admission_reject(self) -> None:
+        """Record one client-visible 429 (router path: all engines
+        rejected)."""
+        with self._lock:
+            self.engine.metrics.admission_rejects += 1
+
     def cancel(self, ticket: Ticket, reason: str = "cancelled") -> None:
         self._cmds.put(("cancel", ticket, reason))
+
+    def request_stop(self, drain: bool = True) -> None:
+        """Signal the decode thread to stop without waiting — the
+        multi-engine router signals every loop first so their drains
+        overlap instead of serializing."""
+        self._drain_on_stop = drain
+        self._stop.set()
+        self._cmds.put(("wake", None, None))
+
+    def join(self, timeout_s: float = 30.0) -> bool:
+        if self._thread.is_alive():
+            self._thread.join(timeout_s)
+        return not self._thread.is_alive()
 
     def close(self, drain: bool = True, timeout_s: float = 30.0) -> bool:
         """Stop the loop. ``drain=True`` finishes everything already
         admitted first (new submits are rejected); ``drain=False``
         cancels all in-flight work. Returns True if the thread exited
         within ``timeout_s``."""
-        self._drain_on_stop = drain
-        self._stop.set()
-        self._cmds.put(("wake", None, None))
-        if self._thread.is_alive():
-            self._thread.join(timeout_s)
-        return not self._thread.is_alive()
+        self.request_stop(drain)
+        return self.join(timeout_s)
 
     # ------------------------------------------------- decode thread
 

@@ -1,0 +1,107 @@
+"""Multi-engine routing: N ``EngineLoop``s (one per device/mesh)
+behind one front end.
+
+``EngineRouter`` presents the same any-thread surface as a single
+``EngineLoop`` (``submit`` / ``cancel`` / ``start`` / ``close`` /
+``inflight``), so ``HttpFrontend`` drives either interchangeably. Each
+loop owns one ``ContinuousEngine`` — typically bound to its own
+``DecodeExecutor`` submesh, so the engines decode on disjoint devices
+and the router is the only place where they meet.
+
+Placement policy: **least-loaded by live rows**. A request is pinned
+to one engine at submit time (gang batching is per-scheduler, so
+migrating later would restart the request); the router picks the loop
+with the fewest live decode rows, breaking ties by total in-flight
+count and then by index. Reads of another thread's scheduler state are
+racy by construction — this is a load *heuristic*, and a one-tick
+stale read costs at most a slightly uneven split.
+
+Admission: the picked loop may reject (its bounded budget is full);
+the router then tries the remaining loops in load order and only
+re-raises when *every* engine rejected — one hot engine must not turn
+away traffic the others could serve.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable, List
+
+from repro.server.loop import EngineLoop, Ticket
+from repro.server.types import AdmissionRejected, ServerRequest
+
+log = logging.getLogger(__name__)
+
+
+class EngineRouter:
+    def __init__(self, loops: List[EngineLoop]):
+        assert loops, "EngineRouter needs at least one EngineLoop"
+        self.loops = list(loops)
+
+    # ---------------------------------------------------- loop surface
+
+    @property
+    def engines(self):
+        """The per-loop ``ContinuousEngine``s (metrics/health fan-in)."""
+        return [lp.engine for lp in self.loops]
+
+    @property
+    def engine(self):
+        """Single-engine compatibility alias (first engine)."""
+        return self.loops[0].engine
+
+    @property
+    def inflight(self) -> int:
+        return sum(lp.inflight for lp in self.loops)
+
+    @property
+    def running(self) -> bool:
+        return all(lp.running for lp in self.loops)
+
+    def start(self) -> "EngineRouter":
+        for lp in self.loops:
+            if not lp.running:
+                lp.start()
+        return self
+
+    def close(self, drain: bool = True, timeout_s: float = 30.0) -> bool:
+        # signal every loop before joining any: the drains overlap
+        # instead of serializing one engine's tail behind another's —
+        # and the joins share ONE deadline, so a hung engine can't
+        # stretch the caller's bound to N * timeout_s
+        for lp in self.loops:
+            lp.request_stop(drain)
+        deadline = time.monotonic() + timeout_s
+        ok = True
+        for lp in self.loops:
+            ok = lp.join(max(0.0, deadline - time.monotonic())) and ok
+        return ok
+
+    # ---------------------------------------------------- routing
+
+    def _load_order(self) -> List[EngineLoop]:
+        def load(item):
+            i, lp = item
+            return (lp.engine.scheduler.live_rows, lp.inflight, i)
+        return [lp for _, lp in
+                sorted(enumerate(self.loops), key=lambda it: load(it))]
+
+    def submit(self, req: ServerRequest,
+               deliver: Callable[[tuple], None]) -> Ticket:
+        order = self._load_order()
+        last_reject = None
+        for lp in order:
+            try:
+                # count_reject=False: a spill that a peer serves is not
+                # a 429 — the counter moves only when everyone rejects
+                ticket = lp.submit(req, deliver, count_reject=False)
+            except AdmissionRejected as e:
+                last_reject = e
+                continue
+            ticket.loop = lp        # cancel() routes back to the owner
+            return ticket
+        order[-1].count_admission_reject()
+        raise last_reject
+
+    def cancel(self, ticket: Ticket, reason: str = "cancelled") -> None:
+        (ticket.loop or self.loops[0]).cancel(ticket, reason)

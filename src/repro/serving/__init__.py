@@ -3,8 +3,11 @@ granularity).
 
 Layering:
     ContinuousEngine  — user API: submit / step / stream / metrics
-    BlockScheduler    — gangs, admission control, compaction, preemption
-    PrefixKVPool      — shape-bucketed KV buffer reuse
+    BlockScheduler    — gangs, admission control, compaction, preemption,
+                        cross-gang straggler merge
+    DecodeExecutor    — placement layer: one mesh; sharded params/caches,
+                        gang submit/harvest, donation policy
+    PrefixKVPool      — shape- and placement-bucketed KV buffer reuse
     StreamRouter      — per-block chunk callbacks / iterators
     ServeMetrics      — TTFB, latency percentiles, occupancy, NFE
 
@@ -13,6 +16,7 @@ API in ``repro.core.decoder``. The legacy synchronous path survives as
 ``repro.core.engine.ServingEngine(mode="batch")``.
 """
 from repro.serving.engine import ContinuousEngine
+from repro.serving.executor import DecodeExecutor
 from repro.serving.metrics import RequestMetrics, ServeMetrics, percentile
 from repro.serving.pool import PrefixKVPool
 from repro.serving.scheduler import BlockScheduler, Gang
@@ -21,8 +25,8 @@ from repro.serving.types import (BlockChunk, Completion, ServeRequest,
                                  round_up_blocks)
 
 __all__ = [
-    "ContinuousEngine", "BlockScheduler", "Gang", "PrefixKVPool",
-    "StreamRouter", "RequestStream", "ServeMetrics", "RequestMetrics",
-    "percentile", "BlockChunk", "Completion", "ServeRequest",
-    "round_up_blocks",
+    "ContinuousEngine", "DecodeExecutor", "BlockScheduler", "Gang",
+    "PrefixKVPool", "StreamRouter", "RequestStream", "ServeMetrics",
+    "RequestMetrics", "percentile", "BlockChunk", "Completion",
+    "ServeRequest", "round_up_blocks",
 ]

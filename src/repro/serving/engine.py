@@ -34,17 +34,22 @@ class ContinuousEngine:
                  max_slots: int = 8, max_gang: Optional[int] = None,
                  pool: Optional[PrefixKVPool] = None,
                  max_waiting: Optional[int] = None,
-                 tokenizer=None, mesh=None, pad_pow2: bool = False):
+                 tokenizer=None, mesh=None, pad_pow2: bool = False,
+                 executor=None):
         self.cfg = cfg
         self.dcfg = dcfg
+        self.executor = executor
         self.tok = tokenizer or ByteTokenizer(cfg.vocab_size)
-        self.pool = pool if pool is not None else PrefixKVPool(cfg)
+        # one pool per executor: buffers are placed on the executor's
+        # mesh and must never migrate (see PrefixKVPool)
+        self.pool = pool if pool is not None \
+            else PrefixKVPool(cfg, executor=executor)
         self.scheduler = BlockScheduler(
             cfg, params, dcfg, max_slots=max_slots, max_gang=max_gang,
             pool=self.pool, max_waiting=max_waiting, tokenizer=self.tok,
-            mesh=mesh, pad_pow2=pad_pow2)
+            mesh=mesh, pad_pow2=pad_pow2, executor=executor)
         self.router = StreamRouter()
-        self.metrics = ServeMetrics(max_slots=max_slots)
+        self.metrics = ServeMetrics(max_slots=self.scheduler.max_slots)
         self.stats = defaultdict(float)    # legacy ServingEngine keys
 
     # ------------------------------------------------------ submission
@@ -103,6 +108,7 @@ class ContinuousEngine:
             self.stats["batches"] += 1
         self.stats["time_s"] += dt
         self.metrics.queue_depth = len(self.scheduler.waiting)
+        self.metrics.gang_merges = self.scheduler.merges
         return completions
 
     def _record(self, comp: Completion) -> None:

@@ -44,6 +44,7 @@ class ServeMetrics:
     admission_rejects: int = 0         # bounded-queue rejections (HTTP 429)
     cancelled: int = 0                 # explicit / disconnect / deadline
     deadline_misses: int = 0           # cancels whose cause was timeout_s
+    gang_merges: int = 0               # cross-gang straggler merges
 
     def sample_tick(self, live_rows: int, tick_dt: float) -> None:
         self.ticks += 1
@@ -103,6 +104,7 @@ class ServeMetrics:
             "admission_rejects": self.admission_rejects,
             "cancelled": self.cancelled,
             "deadline_misses": self.deadline_misses,
+            "gang_merges": self.gang_merges,
             "latency_p50_s": percentile(lat, 50),
             "latency_p99_s": percentile(lat, 99),
             "ttfb_p50_s": percentile(ttfb, 50),

@@ -1,4 +1,4 @@
-"""Shape-bucketed KV-cache buffer pool.
+"""Shape- and placement-bucketed KV-cache buffer pool.
 
 Every decode method except dKV rewrites the prefix (and, with
 ``frozen_suffix``, the pruned-suffix) KV at each block refresh and masks
@@ -8,47 +8,66 @@ no zeroing: reuse is free. The pool therefore only has to bound
 (B, T, H, D) zeros, which at production shapes is the dominant
 per-request host cost and a fresh device allocation each time.
 
-Buffers are keyed by ``(batch, total_len)`` — the same bucketing the
-scheduler uses for gangs — and retained on a bounded free list with
-oldest-first eviction.
+Buffers are keyed by ``(batch, total_len, placement)`` — the shape
+bucketing the scheduler uses for gangs plus the ``DecodeExecutor``
+placement key. The placement component exists for the multi-engine
+world: a pool is *bound to one executor* (one mesh), allocation routes
+through it so buffers are born sharded, and a buffer placed on one
+mesh can never be handed to a decoder driving another — that would be
+a silent cross-device copy at best and a reuse of donated (dead)
+memory at worst. Engines must therefore hold one pool per executor;
+``BlockScheduler`` enforces the binding at construction.
+
+Buffers are retained on a bounded free list with oldest-first
+eviction.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 
 from repro.models.config import ModelConfig
 from repro.models.model import init_cache
 
+HOST_PLACEMENT = ("host",)    # the executor-less single-device world
+
 
 class PrefixKVPool:
-    def __init__(self, cfg: ModelConfig, max_free: int = 8):
+    def __init__(self, cfg: ModelConfig, max_free: int = 8, executor=None):
         self.cfg = cfg
         self.max_free = max_free
-        self._free: List[Tuple[int, Tuple[int, int], Any]] = []
+        self.executor = executor
+        self.placement: Tuple = (executor.placement if executor is not None
+                                 else HOST_PLACEMENT)
+        self._free: List[Tuple[int, tuple, Any]] = []
         self._seq = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
+    def _key(self, batch: int, total_len: int) -> tuple:
+        return (batch, total_len, self.placement)
+
     def acquire(self, batch: int, total_len: int):
         """Return a cache pytree for the bucket, reusing the most
         recently released matching buffer when one exists."""
-        key = (batch, total_len)
+        key = self._key(batch, total_len)
         for i in range(len(self._free) - 1, -1, -1):
             if self._free[i][1] == key:
                 _, _, cache = self._free.pop(i)
                 self.hits += 1
                 return cache
         self.misses += 1
+        if self.executor is not None:
+            return self.executor.init_cache(batch, total_len)
         return init_cache(self.cfg, batch, total_len)
 
     def release(self, batch: int, total_len: int, cache) -> None:
         if cache is None:
             return
         self._seq += 1
-        self._free.append((self._seq, (batch, total_len), cache))
+        self._free.append((self._seq, self._key(batch, total_len), cache))
         while len(self._free) > self.max_free:
             self._free.pop(0)
             self.evictions += 1

@@ -58,6 +58,10 @@ def _pow2_le(n: int) -> int:
     return 1 << (n.bit_length() - 1)
 
 
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
 class Gang:
     """A batch of requests decoding in lockstep, one block per tick.
     ``requests[i] is None`` marks a padding or vacated lane."""
@@ -97,12 +101,23 @@ class BlockScheduler:
                  max_slots: int = 8, max_gang: Optional[int] = None,
                  pool: Optional[PrefixKVPool] = None,
                  max_waiting: Optional[int] = None,
-                 tokenizer=None, mesh=None, pad_pow2: bool = False):
+                 tokenizer=None, mesh=None, pad_pow2: bool = False,
+                 executor=None, batch_multiple: Optional[int] = None,
+                 merge_gangs: bool = True):
         self.cfg = cfg
         self.params = params
         self.dcfg = dcfg
-        self.max_slots = max_slots
-        self.max_gang = min(max_gang or max_slots, max_slots)
+        self.executor = executor
+        # Gang batches sized as a multiple of the mesh's data-axis
+        # extent shard evenly; any other size falls back to replicated
+        # placement (never silent padding — see DecodeExecutor). The
+        # scheduler therefore *rounds gang sizes up* to this multiple
+        # (pad rows replicate row 0, exactly like pad_pow2 padding).
+        self.batch_multiple = (batch_multiple if batch_multiple is not None
+                               else (executor.data_extent
+                                     if executor is not None else 1))
+        self.max_slots = max(max_slots, self.batch_multiple)
+        self.max_gang = min(max_gang or self.max_slots, self.max_slots)
         # pad_pow2 snaps gang sizes to a power-of-two ladder: fewest
         # compiled batch shapes (log2(max_slots) sizes), at the price of
         # pad rows that burn compute — worth it when compiles are the
@@ -110,10 +125,20 @@ class BlockScheduler:
         # exact sizes: at most max_slots distinct batch shapes, and
         # every freed row immediately stops costing FLOPs.
         self.pad_pow2 = pad_pow2
-        self.pool = pool if pool is not None else PrefixKVPool(cfg)
+        if pool is None:
+            pool = PrefixKVPool(cfg, executor=executor)
+        elif pool.executor is not executor:
+            # a shared pool across meshes would hand buffers placed on
+            # one mesh to decoders driving another — refuse up front
+            raise ValueError(
+                "PrefixKVPool must be bound to the scheduler's executor "
+                f"(pool.executor={pool.executor!r}, "
+                f"scheduler executor={executor!r})")
+        self.pool = pool
         self.max_waiting = max_waiting
         self.tok = tokenizer
-        self.mesh = mesh
+        self.mesh = mesh if executor is None else executor.mesh
+        self.merge_gangs = merge_gangs
         self.waiting: Deque[ServeRequest] = deque()
         self.paused: Deque[Tuple[ServeRequest, DecodeState,
                                  DiffusionDecoder]] = deque()
@@ -123,6 +148,7 @@ class BlockScheduler:
         self._cancel: set = set()
         self._uid = 0
         self.last_decoded_rows = 0
+        self.merges = 0            # cross-gang straggler merges performed
 
     # ------------------------------------------------------ bookkeeping
 
@@ -130,8 +156,15 @@ class BlockScheduler:
         if gen_len not in self._decoders:
             d = dataclasses.replace(self.dcfg, gen_len=gen_len)
             self._decoders[gen_len] = DiffusionDecoder(
-                self.cfg, self.params, d, mesh=self.mesh)
+                self.cfg, self.params, d, mesh=self.mesh,
+                executor=self.executor)
         return self._decoders[gen_len]
+
+    def _pad_batch(self, n: int) -> int:
+        """Gang-size policy: optional pow2 ladder, then round up to the
+        data-shard multiple so sharding never falls back silently."""
+        padded = _pow2_ge(n) if self.pad_pow2 else n
+        return _round_up(padded, self.batch_multiple)
 
     @property
     def slots_used(self) -> int:
@@ -242,6 +275,86 @@ class BlockScheduler:
         self._compact()
         return chunks, completions
 
+    # ------------------------------------------------------ merge
+
+    def _merge_stragglers(self) -> None:
+        """Cross-gang merge (ROADMAP open item): gangs that sit at the
+        same (shape bucket, block index) — typically stragglers left
+        ragged by early exits, cancels, or split admissions — are fused
+        into one gang before the next ``decode_block``, so N part-full
+        block calls become one. Safe only for batch-invariant methods
+        (per-row tokens don't depend on batching); dkv gangs are never
+        touched. Merged rows restart their gang-level counters exactly
+        like compaction (``take_rows``) does."""
+        if not self.merge_gangs or len(self.gangs) < 2:
+            return
+        groups: Dict[tuple, List[Gang]] = {}
+        for g in self.gangs:
+            st = g.state
+            if not g.decoder.batch_invariant or st.finished:
+                continue
+            if any(r is not None and r.uid in self._preempt
+                   for r in g.requests):
+                continue    # let preemption extract its row first
+            key = (st.prompt_len, st.total_len, st.block_idx)
+            groups.setdefault(key, []).append(g)
+        for gs in groups.values():
+            if len(gs) < 2:
+                continue
+            gs.sort(key=lambda g: len(g.open_rows()))
+            bin_gangs: List[Gang] = []
+            bin_rows = bin_slots = 0
+            for g in gs:
+                r = len(g.open_rows())
+                # a merge may never grow the slot footprint: the padded
+                # merged batch must fit inside the slots the source
+                # gangs release (admission's padded<=max_slots guard
+                # doesn't apply here, and pow2 padding of e.g. three
+                # 1-row gangs would otherwise mint a 4th slot out of
+                # thin air), and stay within the gang-size cap
+                fits = (bin_rows + r <= self.max_gang
+                        and self._pad_batch(bin_rows + r)
+                        <= bin_slots + g.batch)
+                if bin_gangs and not fits:
+                    if len(bin_gangs) >= 2:
+                        self._merge_bin(bin_gangs)
+                    bin_gangs, bin_rows, bin_slots = [], 0, 0
+                bin_gangs.append(g)
+                bin_rows += r
+                bin_slots += g.batch
+            if len(bin_gangs) >= 2:
+                self._merge_bin(bin_gangs)
+
+    def _merge_bin(self, gangs: List[Gang]) -> None:
+        decoder = gangs[0].decoder
+        T = gangs[0].state.total_len
+        parts: List[Tuple[DecodeState, List[int]]] = []
+        reqs: List[Optional[ServeRequest]] = []
+        for g in gangs:
+            rows = g.open_rows()
+            parts.append((g.state, rows))
+            reqs.extend(g.requests[i] for i in rows)
+        new_b = self._pad_batch(len(reqs))
+        if new_b > len(reqs):   # pad lanes replicate the first open row
+            parts.append((parts[0][0],
+                          [parts[0][1][0]] * (new_b - len(reqs))))
+            reqs.extend([None] * (new_b - len(reqs)))
+        # release source buffers BEFORE acquiring the merged one: their
+        # contents are never read (merge_rows only needs a right-shaped
+        # backing; the next refresh rewrites it), and a matching-shape
+        # release turns the acquire into a guaranteed pool hit
+        for g in gangs:
+            if g.state.cache is not None:
+                self.pool.release(g.state.batch, T, g.state.cache)
+                g.state.cache = None
+            self.gangs.remove(g)
+        cache = None
+        if decoder.dcfg.method != "vanilla":
+            cache = self.pool.acquire(new_b, T)
+        state = decoder.merge_rows(parts, cache=cache)
+        self.gangs.append(Gang(decoder, state, reqs))
+        self.merges += 1
+
     # ------------------------------------------------------ tick
 
     def tick(self) -> Tuple[List[BlockChunk], List[Completion]]:
@@ -249,6 +362,7 @@ class BlockScheduler:
         advance every gang one block → harvest chunks/completions →
         compact + backfill."""
         chunks, completions = self._apply_cancels()
+        self._merge_stragglers()
         self._admit()
         # rows whose decode this tick actually pays for — sampled before
         # the decode loop so occupancy isn't attributed post-compaction
@@ -307,13 +421,7 @@ class BlockScheduler:
                 if not group:
                     continue
                 decoder = self._decoder(bucket[1])
-                if self.pad_pow2 and decoder.batch_invariant:
-                    n = min(len(group),
-                            _pow2_le(min(free, self.max_gang)))
-                    padded = _pow2_ge(n)
-                else:
-                    n = min(len(group), self.max_gang)
-                    padded = n
+                n, padded = self._gang_target(len(group), free, decoder)
                 if n == 0 or padded > free:
                     continue
                 batch_reqs = group[:n]
@@ -329,6 +437,28 @@ class BlockScheduler:
         if admitted_ids:
             self.waiting = deque(r for r in self.waiting
                                  if id(r) not in admitted_ids)
+
+    def _gang_target(self, group_len: int, free: int,
+                     decoder: DiffusionDecoder):
+        """Pick (rows to admit, padded gang batch) for one shape group.
+        pow2 snapping only applies to compactable (batch-invariant)
+        methods — dkv pad rows would decode until the whole gang
+        finishes — while data-shard rounding applies to every method
+        (sharded placement needs it regardless). The shrink loop keeps
+        the padded target inside ``max_slots`` so a rounding multiple
+        that doesn't divide ``max_slots`` can never livelock the
+        queue."""
+        pow2 = self.pad_pow2 and decoder.batch_invariant
+        n = min(group_len,
+                _pow2_le(min(free, self.max_gang)) if pow2
+                else self.max_gang)
+        while n > 0:
+            padded = _round_up(_pow2_ge(n) if pow2 else n,
+                               self.batch_multiple)
+            if padded <= self.max_slots:
+                return n, padded
+            n -= 1
+        return 0, 0
 
     def _form_gang(self, decoder: DiffusionDecoder, bucket, batch_reqs,
                    padded: int) -> Gang:
@@ -447,8 +577,8 @@ class BlockScheduler:
                     self.pool.release(st.batch, T, st.cache)
                 continue
             if gang.decoder.batch_invariant:
-                new_b = _pow2_ge(len(open_rows)) if self.pad_pow2 \
-                    else len(open_rows)
+                new_b = _round_up(_pow2_ge(len(open_rows)) if self.pad_pow2
+                                  else len(open_rows), self.batch_multiple)
                 if new_b < st.batch:
                     rows = open_rows + [open_rows[0]] * \
                         (new_b - len(open_rows))

@@ -1,0 +1,95 @@
+"""Subprocess worker for tests/test_sharded_decode.py.
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set
+by the parent — see tests/conftest.py for why the flag must never be
+set in-process) and compares, *within one process*, single-device
+decode (``executor=None``) against ``DecodeExecutor``-placed decode on
+real (data, model) host meshes. Prints one JSON document on stdout.
+
+In-process comparison matters: run-to-run XLA:CPU noise (threaded
+matmul reduction order) is the documented reason dkv can't be compared
+exactly across processes; inside one process both paths see the same
+runtime, so any divergence is placement-induced.
+"""
+import json
+import sys
+
+import numpy as np
+
+
+def main():
+    quick = "--quick" in sys.argv
+    import jax
+
+    from repro.core.decoder import METHODS, DecodeConfig, DiffusionDecoder
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import get_config, init_params
+    from repro.serving import ContinuousEngine, DecodeExecutor
+    from repro.data.tokenizer import ByteTokenizer
+
+    cfg = get_config("tiny")
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, 200, (4, 10)).astype(np.int32)
+    out = {"n_devices": len(jax.devices()), "runs": []}
+
+    def dcfg(method):
+        return DecodeConfig(method=method, gen_len=16, block_size=8,
+                            window=8)
+
+    # satellite matrix: data = 2/4, model = 1/2, all five methods
+    meshes = [(2, 1)] if quick else [(2, 1), (4, 1), (2, 2)]
+    methods = ["streaming", "fast"] if quick else list(METHODS)
+    for method in methods:
+        d = dcfg(method)
+        ref = DiffusionDecoder(cfg, params, d).generate(prompts.copy())
+        for dm, mm in meshes:
+            ex = DecodeExecutor(cfg, params, make_host_mesh(dm, mm))
+            r = DiffusionDecoder(cfg, None, d,
+                                 executor=ex).generate(prompts.copy())
+            out["runs"].append({
+                "method": method, "data": dm, "model": mm,
+                "exact": bool((ref.tokens == r.tokens).all()),
+                "agree": float((ref.tokens == r.tokens).mean()),
+                "valid": bool(((r.tokens >= 0)
+                               & (r.tokens < cfg.vocab_size)).all()),
+                "nfe": int(r.nfe), "ref_nfe": int(ref.nfe),
+            })
+
+    # divisibility fallback: batch 3 doesn't divide data=2 — the
+    # executor must replicate (never silently pad) and stay exact
+    d = dcfg("streaming")
+    ref3 = DiffusionDecoder(cfg, params, d).generate(prompts[:3].copy())
+    ex2 = DecodeExecutor(cfg, params, make_host_mesh(2, 1))
+    r3 = DiffusionDecoder(cfg, None, d,
+                          executor=ex2).generate(prompts[:3].copy())
+    sh = ex2.batch_sharding(2, 3)
+    out["fallback"] = {
+        "exact": bool((ref3.tokens == r3.tokens).all()),
+        "replicated": bool(sh.spec[0] is None),
+        "sharded_even": bool(ex2.batch_sharding(2, 4).spec[0] is not None),
+    }
+
+    # sharded continuous engine end-to-end: gang rounding (odd request
+    # count on data=2) + placement-bound pool + per-row identity
+    tok = ByteTokenizer(cfg.vocab_size)
+    eng = ContinuousEngine(cfg, params, d, max_slots=8, tokenizer=tok,
+                           executor=ex2)
+    n_req = 3
+    uids = [eng.submit(prompts[i], max_tokens=16) for i in range(n_req)]
+    comps = {c.uid: c for c in eng.run_to_completion()}
+    out["engine"] = {
+        "batch_multiple": eng.scheduler.batch_multiple,
+        "pad_3": eng.scheduler._pad_batch(3),
+        "served": len(comps),
+        "exact": bool(all(
+            (comps[uids[i]].tokens == ref3.tokens[i][:16]).all()
+            for i in range(n_req))),
+        "pool_placement": list(eng.pool.placement),
+    }
+    json.dump(out, sys.stdout)
+    sys.stdout.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -446,3 +446,134 @@ def test_legacy_engine_api_continuous_default():
     assert len(done) == 3
     assert all(isinstance(c.text, str) for c in done)
     assert eng.throughput > 0
+
+
+# ------------------------------------------------------ placement layer
+
+
+def test_executor_1x1_identity_and_pool_binding():
+    """A DecodeExecutor on a trivial 1x1 mesh is the identity
+    placement: bit-identical tokens, data_extent 1. Pools are bound to
+    one executor — a host pool handed to an executor-backed scheduler
+    must be refused (cross-mesh buffer reuse hazard)."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving import DecodeExecutor
+
+    d = _dcfg("streaming")
+    ref = DiffusionDecoder(CFG, PARAMS, d).generate(PROMPTS.copy())
+    ex = DecodeExecutor(CFG, PARAMS, make_host_mesh(1, 1))
+    got = DiffusionDecoder(CFG, None, d, executor=ex).generate(
+        PROMPTS.copy())
+    assert (ref.tokens == got.tokens).all()
+    assert ex.data_extent == 1
+    with pytest.raises(ValueError):
+        ContinuousEngine(CFG, PARAMS, d, pool=PrefixKVPool(CFG),
+                         executor=ex)
+    # placement-keyed pool: host and executor pools bucket differently
+    host_pool, ex_pool = PrefixKVPool(CFG), PrefixKVPool(CFG, executor=ex)
+    assert host_pool._key(2, 24) != ex_pool._key(2, 24)
+
+
+def test_pooled_prefix_reuse_across_gangs_no_aliasing():
+    """Regression (reuse-after-free hazard): a sub-state extracted by
+    take_rows must not alias KV of the gang it left — the gang's buffer
+    goes back to the pool, is handed to a *new* gang, and gets
+    rewritten (or donated on accelerators, where aliased memory is
+    *dead*). dkv is the method whose cache carries across blocks, and
+    its in-process token comparison is unsound (ulp noise, see
+    test_dkv_equivalence_structural), so the contract is asserted on
+    the cache bytes themselves: the parked KV must be bit-stable while
+    a second gang churns the pooled buffer."""
+    d = _dcfg("dkv", gen_len=32)         # dkv: cache carries across blocks
+    dec = DiffusionDecoder(CFG, PARAMS, d)
+    pool = PrefixKVPool(CFG)
+
+    st = dec.prefill(PROMPTS.copy(), cache=pool.acquire(4, 42))
+    dec.decode_block(st)
+    sub = dec.take_rows(st, [1])          # park row 1 mid-generation
+    snap = [np.array(leaf) for leaf in jax.tree.leaves(sub.cache)]
+    # the first gang's buffer returns to the pool and a second gang
+    # reuses (and on accelerators would donate) it before the parked
+    # row resumes
+    pool.release(4, 42, st.cache)
+    st2 = dec.prefill(PROMPTS.copy(), cache=pool.acquire(4, 42))
+    assert pool.hits >= 1                 # really the same buffer
+    while not st2.finished:
+        dec.decode_block(st2)
+    for before, after in zip(snap, jax.tree.leaves(sub.cache)):
+        assert (before == np.array(after)).all(), \
+            "parked take_rows KV aliased the pooled buffer"
+    while not sub.finished:               # parked row still completes
+        dec.decode_block(sub)
+    assert dec.finalize(sub).tokens.shape == (1, 32)
+
+
+def test_gang_sizes_round_to_batch_multiple():
+    """Data-shard-aware bucketing: gang batches round up to the data
+    extent so sharded placement never falls back silently; pad lanes
+    are real (replicate row 0) but carry no request."""
+    sched = BlockScheduler(CFG, PARAMS, _dcfg(), max_slots=8,
+                           batch_multiple=4)
+    assert sched._pad_batch(1) == 4 and sched._pad_batch(5) == 8
+    for b in range(3):
+        sched.submit(PROMPTS[b], 16, 16)
+    sched.tick()
+    assert len(sched.gangs) == 1
+    gang = sched.gangs[0]
+    assert gang.batch == 4
+    assert sum(r is not None for r in gang.requests) == 3
+    # a multiple that doesn't divide max_slots must not livelock
+    sched2 = BlockScheduler(CFG, PARAMS, _dcfg(), max_slots=8,
+                            batch_multiple=3)
+    n, padded = sched2._gang_target(8, 8, sched2._decoder(16))
+    assert n > 0 and padded <= 8 and padded % 3 == 0
+
+
+# ------------------------------------------------------ cross-gang merge
+
+
+def test_cross_gang_merge_of_stragglers():
+    """Two same-bucket gangs left ragged (here: one row of each
+    cancelled) fuse into ONE gang at the next block boundary — half the
+    block calls — and the surviving rows stay bit-identical."""
+    d = _dcfg("streaming", gen_len=24, early_exit=False)
+    ref = DiffusionDecoder(CFG, PARAMS, d).generate(PROMPTS.copy())
+    eng = ContinuousEngine(CFG, PARAMS, d, max_slots=4, max_gang=2,
+                           tokenizer=TOK)
+    uids = [eng.submit(PROMPTS[i], max_tokens=24) for i in range(4)]
+    eng.step()                            # two gangs of 2 decode block 0
+    assert len(eng.scheduler.gangs) == 2
+    eng.cancel(uids[1])
+    eng.cancel(uids[3])
+    eng.step()          # cancels vacate -> stragglers merge -> block 1
+    assert eng.scheduler.merges == 1
+    assert len(eng.scheduler.gangs) == 1
+    assert eng.scheduler.gangs[0].batch == 2
+    comps = {c.uid: c for c in eng.run_to_completion()}
+    assert (comps[uids[0]].tokens == ref.tokens[0]).all()
+    assert (comps[uids[2]].tokens == ref.tokens[2]).all()
+    assert eng.metrics.snapshot()["gang_merges"] == 1
+
+
+def test_merge_respects_max_gang_and_skips_dkv():
+    """Gangs whose combined open rows exceed max_gang stay separate;
+    dkv gangs (non-batch-invariant) are never merged."""
+    d = _dcfg("streaming", gen_len=24, early_exit=False)
+    eng = ContinuousEngine(CFG, PARAMS, d, max_slots=4, max_gang=2,
+                           tokenizer=TOK)
+    for i in range(4):
+        eng.submit(PROMPTS[i], max_tokens=24)
+    eng.step()
+    eng.step()                            # 2+2 > max_gang: no merge
+    assert eng.scheduler.merges == 0 and len(eng.scheduler.gangs) == 2
+    dv = _dcfg("dkv", gen_len=24)
+    eng2 = ContinuousEngine(CFG, PARAMS, dv, max_slots=4, max_gang=1,
+                            tokenizer=TOK)
+    for i in range(2):
+        eng2.submit(PROMPTS[i], max_tokens=24)
+    eng2.step()                           # two 1-row dkv gangs
+    assert len(eng2.scheduler.gangs) == 2
+    eng2.scheduler.max_gang = 2           # merge would now fit...
+    eng2.step()
+    assert eng2.scheduler.merges == 0     # ...but dkv is never merged
+    eng2.run_to_completion()
