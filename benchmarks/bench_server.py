@@ -39,6 +39,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 import numpy as np
 
 from bench_serving import GEN_LEN, ragged_model, ragged_workload
+from common import shared_prefix_workload
 from repro.core.decoder import DecodeConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving import ContinuousEngine, percentile
@@ -48,10 +49,11 @@ from repro.server import client as C
 BLOCK = 8
 
 
-def build_frontend(max_slots: int, max_pending: int):
+def build_frontend(max_slots: int, max_pending: int,
+                   prefix_cache: bool = False):
     cfg, params = ragged_model()
     d = DecodeConfig(method="streaming", gen_len=GEN_LEN, block_size=BLOCK,
-                     window=8)
+                     window=8, prefix_cache=prefix_cache, cache_chunk=16)
     eng = ContinuousEngine(cfg, params, d, max_slots=max_slots,
                            tokenizer=ByteTokenizer(cfg.vocab_size))
     return HttpFrontend(EngineLoop(eng, max_pending=max_pending,
@@ -158,6 +160,77 @@ async def open_loop(host, port, n, rate_rps, slo_s, work, seed=11):
     }
 
 
+async def shared_prefix_loop(host, port, clients, per_client, work):
+    """Closed-loop JSON completions over *persistent* connections
+    (``ClientSession`` keep-alive): the shared-prefix regime is many
+    short exchanges per client, where per-request TCP setup would
+    otherwise dominate small-prompt TTFB. Returns client-observed
+    latency plus connection-reuse and server cache counters."""
+    async def one_client(idx):
+        sess = C.ClientSession(host, port)
+        out = []
+        try:
+            for j in range(per_client):
+                prompt, budget = work[(idx * per_client + j) % len(work)]
+                t0 = time.perf_counter()
+                status, _, doc = await sess.complete(
+                    {"prompt": prompt, "max_tokens": budget})
+                lat = time.perf_counter() - t0
+                if status == 200:
+                    out.append({"latency_s": lat,
+                                "ttfb_s": doc["ttfb_s"],
+                                "n_tokens": doc["n_tokens"],
+                                "cache_hit_tokens":
+                                    doc["cache_hit_tokens"]})
+        finally:
+            await sess.close()
+        return out, sess.connects, sess.requests
+
+    t0 = time.perf_counter()
+    per = await asyncio.gather(*[one_client(i) for i in range(clients)])
+    wall = time.perf_counter() - t0
+    recs = [r for rs, _, _ in per for r in rs]
+    return {
+        "clients": clients,
+        "requests": len(recs),
+        "wall_s": wall,
+        "connections_opened": sum(c for _, c, _ in per),
+        "requests_per_connection": (len(recs)
+                                    / max(sum(c for _, c, _ in per), 1)),
+        "warm_requests": sum(r["cache_hit_tokens"] > 0 for r in recs),
+        "hit_tokens": sum(r["cache_hit_tokens"] for r in recs),
+        "ttfb_p50_s": percentile([r["ttfb_s"] for r in recs], 50),
+        "ttfb_p99_s": percentile([r["ttfb_s"] for r in recs], 99),
+        "latency_p50_s": percentile([r["latency_s"] for r in recs], 50),
+        "latency_p99_s": percentile([r["latency_s"] for r in recs], 99),
+    }
+
+
+async def run_shared_prefix(args):
+    """Shared-prefix scenario: its own front end with the prefix cache
+    on, zipf template traffic, keep-alive clients."""
+    frontend, eng = build_frontend(args.max_slots, args.max_pending,
+                                   prefix_cache=True)
+    await frontend.start()
+    host, port = frontend.host, frontend.port
+    prompts, _, reuse = shared_prefix_workload(
+        max(16, args.open_n), templates=4, template_len=64, tail_len=8,
+        as_text=True)
+    work = [(p, GEN_LEN) for p in prompts]
+    # warmup wave compiles shapes AND warms the template chunks
+    await shared_prefix_loop(host, port, args.clients,
+                             max(1, 8 // args.clients), work[:8])
+    out = await shared_prefix_loop(host, port, args.clients,
+                                   args.per_client, work)
+    snap = eng.metrics.snapshot()
+    out["template_reuse_frac"] = reuse
+    out["server_cache"] = {k: snap[k] for k in
+                           ("prefix_cache_hits", "prefix_cache_hit_tokens",
+                            "prefix_cache_evictions", "prefix_cache_bytes")}
+    await frontend.shutdown(drain=True)
+    return out
+
+
 async def run(args):
     frontend, eng = build_frontend(args.max_slots, args.max_pending)
     await frontend.start()
@@ -174,12 +247,14 @@ async def run(args):
                             args.slo, work)
     snap = eng.metrics.snapshot()
     await frontend.shutdown(drain=True)
+    shared = await run_shared_prefix(args)
     return {"config": {"max_slots": args.max_slots,
                        "max_pending": args.max_pending,
                        "gen_len": GEN_LEN, "block": BLOCK,
                        "method": "streaming"},
             "closed_loop": closed,
             "open_loop": open_,
+            "shared_prefix": shared,
             "server_metrics": {k: snap[k] for k in
                                ("requests", "tokens", "mean_occupancy",
                                 "admission_rejects", "cancelled",
@@ -212,6 +287,13 @@ def main():
           f"{o['slo_s']}s)  rejects={o['admission_rejects']}  "
           f"deadline_misses={o['deadline_misses']}  "
           f"p99={o['latency_p99_s'] * 1e3:.0f}ms")
+    s = result["shared_prefix"]
+    print(f"shared-prefix: {s['requests']} req over "
+          f"{s['connections_opened']} conns "
+          f"({s['requests_per_connection']:.1f} req/conn, keep-alive)  "
+          f"warm={s['warm_requests']} hit_toks={s['hit_tokens']}  "
+          f"ttfb_p50={s['ttfb_p50_s'] * 1e3:.0f}ms  "
+          f"p50={s['latency_p50_s'] * 1e3:.0f}ms")
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

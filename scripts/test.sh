@@ -9,6 +9,10 @@
 #                                # trip, SSE, 429, deadlines, disconnect)
 #   scripts/test.sh sharded      # mesh-parallel decode suite (forced
 #                                # 8-device host mesh) + sharded bench
+#   scripts/test.sh cache        # cross-request prefix cache suite +
+#                                # a quick bench_cache run
+#   scripts/test.sh lint         # compileall + import-cycle smoke
+#                                # (also runs at the top of tier-1)
 #   scripts/test.sh all          # suite + smoke
 #
 # Tests run on the single real CPU device; the dry-run subprocesses set
@@ -20,8 +24,35 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+run_lint() {
+    # fail fast on syntax errors and package-level import cycles before
+    # paying for any jit compile: byte-compile the whole tree, then
+    # import every repro package fresh in one interpreter
+    python -m compileall -q src
+    python - <<'EOF'
+import importlib, pkgutil
+import repro
+mods = [m.name for m in pkgutil.walk_packages(repro.__path__, "repro.")
+        if ".launch." not in m.name       # launchers parse argv/XLA flags
+        and not m.name.endswith("__main__")]
+for name in sorted(mods):
+    importlib.import_module(name)
+print(f"lint: imported {len(mods)} repro modules, no cycles")
+EOF
+}
+
 run_suite() {
+    run_lint
     python -m pytest -x -q "$@"
+}
+
+run_cache() {
+    # prefix-cache suite (radix store, cached-prefill identity,
+    # routing), then the cache bench on the quick workload
+    python -m pytest -x -q tests/test_cache.py
+    echo "== bench_cache --quick =="
+    python benchmarks/bench_cache.py --quick \
+        --out results/BENCH_cache_quick.json
 }
 
 run_smoke() {
@@ -69,6 +100,8 @@ case "${1:-suite}" in
     kernels) run_kernels ;;
     server)  run_server ;;
     sharded) run_sharded ;;
+    cache)   run_cache ;;
+    lint)    run_lint ;;
     all)     run_suite; run_smoke ;;
     suite)   run_suite ;;
     *)       run_suite "$@" ;;

@@ -1,0 +1,27 @@
+"""Cross-request prefix KV cache (content-addressed, placement-aware).
+
+Layering:
+    PrefixKVCache  — chunk store: radix-tree prompt matching, pinned
+                     (ref-counted) LRU eviction under a byte budget,
+                     placement-keyed like ``PrefixKVPool``
+    RadixTree      — hash-chained chunk index (``radix``)
+    slicing        — KV-pytree time-slice extract/assemble helpers
+
+Consumed by ``DiffusionDecoder.prime_prompt_kv`` (chunk-aligned
+prefill: assemble the longest cached prefix, compute only the novel
+tail), ``BlockScheduler`` (hit-aware admission grouping), and
+``EngineRouter`` (cache-affinity placement). Distinct from
+``repro.serving.PrefixKVPool``, which recycles *buffers* by shape;
+this store reuses *content*.
+"""
+from repro.cache.radix import ChunkNode, RadixTree, chunk_key
+from repro.cache.slicing import (assemble_batch, assemble_rows,
+                                 concat_chunks, extract_row, slice_nbytes,
+                                 write_row)
+from repro.cache.store import HOST_PLACEMENT, PrefixKVCache
+
+__all__ = [
+    "PrefixKVCache", "RadixTree", "ChunkNode", "chunk_key",
+    "extract_row", "write_row", "concat_chunks", "assemble_rows",
+    "assemble_batch", "slice_nbytes", "HOST_PLACEMENT",
+]

@@ -1,0 +1,103 @@
+"""Time-axis slice helpers for the decoder's KV cache pytree.
+
+The cache layout (``repro.models.model.init_cache``) is
+``{"scan": ((k, v), ...), "tail": ((k, v), ...)}`` with attention
+buffers shaped ``(reps, B, T, H, D)`` for the scan-stacked pattern
+groups and ``(B, T, H, D)`` for tail layers. The prefix cache stores
+*per-row, per-chunk* time slices of that tree as host numpy arrays —
+byte copies, so a chunk assembled back into a gang buffer carries
+exactly the values the original prefill pass wrote (the bit-identity
+the cached-prefill tests assert).
+
+Only attention caches have a time axis; ``repro.cache`` is gated to
+attention-only layouts (the decoder asserts it), so every leaf here is
+4- or 5-dimensional KV.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def extract_row(cache, row: int, t0: int, t1: int):
+    """One row's KV for time span [t0, t1) as a host pytree (blocking
+    device→host copies; ``np.asarray`` preserves bytes incl. bf16)."""
+    return {
+        "scan": jax.tree.map(lambda a: np.asarray(a[:, row, t0:t1]),
+                             cache["scan"]),
+        "tail": jax.tree.map(lambda a: np.asarray(a[row, t0:t1]),
+                             cache["tail"]),
+    }
+
+
+def write_row(cache, row: int, t0: int, kv):
+    """Write a host KV slice back at [t0, t0+span) of one row. Returns
+    the updated cache pytree (functional, like every cache op)."""
+    return {
+        "scan": jax.tree.map(
+            lambda a, s: a.at[:, row, t0:t0 + s.shape[1]].set(
+                jnp.asarray(s, a.dtype)), cache["scan"], kv["scan"]),
+        "tail": jax.tree.map(
+            lambda a, s: a.at[row, t0:t0 + s.shape[0]].set(
+                jnp.asarray(s, a.dtype)), cache["tail"], kv["tail"]),
+    }
+
+
+def concat_chunks(chunks: List[dict]):
+    """Fuse consecutive chunk slices into one contiguous slice, so
+    assembling a long cached prefix costs one device write per row
+    instead of one per chunk."""
+    if len(chunks) == 1:
+        return chunks[0]
+    return {
+        "scan": jax.tree.map(lambda *xs: np.concatenate(xs, axis=1),
+                             *[c["scan"] for c in chunks]),
+        "tail": jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
+                             *[c["tail"] for c in chunks]),
+    }
+
+
+def assemble_rows(cache, row_chunks: Dict[int, List[dict]]):
+    """Copy each row's cached chunk chain into the gang cache starting
+    at time 0 (prompt region). ``row_chunks`` maps row index → ordered
+    chunk KV slices."""
+    for row, chunks in row_chunks.items():
+        if chunks:
+            cache = write_row(cache, row, 0, concat_chunks(chunks))
+    return cache
+
+
+def assemble_batch(cache, per_row_chunks: List[List[dict]]):
+    """Assembly for a whole gang at a common hit depth: every row gets
+    the SAME number of chunks (its own content), so the per-row chains
+    stack into one host array per leaf and land in ONE device write per
+    leaf — a `.at[].set` outside jit copies the entire buffer, so the
+    per-row path costs B full-cache copies where this costs one."""
+    if not per_row_chunks or not per_row_chunks[0]:
+        return cache
+    assert len({len(c) for c in per_row_chunks}) == 1, \
+        "assemble_batch wants a common chunk depth across rows"
+    rows = [concat_chunks(chunks) for chunks in per_row_chunks]
+    # stack rows: scan slices (reps, L, H, D) -> (reps, B, L, H, D) at
+    # axis 1, tail slices (L, H, D) -> (B, L, H, D) at axis 0
+    kv = {
+        "scan": jax.tree.map(lambda *xs: np.stack(xs, axis=1),
+                             *[r["scan"] for r in rows]),
+        "tail": jax.tree.map(lambda *xs: np.stack(xs, axis=0),
+                             *[r["tail"] for r in rows]),
+    }
+    return {
+        "scan": jax.tree.map(
+            lambda a, s: a.at[:, :, :s.shape[2]].set(
+                jnp.asarray(s, a.dtype)), cache["scan"], kv["scan"]),
+        "tail": jax.tree.map(
+            lambda a, s: a.at[:, :s.shape[1]].set(
+                jnp.asarray(s, a.dtype)), cache["tail"], kv["tail"]),
+    }
+
+
+def slice_nbytes(kv) -> int:
+    return sum(int(leaf.nbytes) for leaf in jax.tree.leaves(kv))

@@ -98,10 +98,27 @@ class DecodeConfig:
     # paper's config. The suffix KV is one refresh stale within a block
     # (same approximation class as the prefix cache itself).
     frozen_suffix: bool = False
+    # Cross-request prefix KV reuse (repro.cache): the prompt KV is
+    # computed once at prefill by chunk-causal passes (chunk i attends
+    # to chunks 0..i only, bidirectional within the chunk) so each
+    # chunk's KV is content-addressable and shareable across requests;
+    # block refreshes then rewrite only the generated region and attend
+    # to the frozen prompt KV. The prompt no longer sees the masked
+    # region (same approximation class as Fast-dLLM's prefix cache);
+    # cached vs cold prefill stays bit-identical by construction.
+    prefix_cache: bool = False
+    cache_chunk: int = 16          # prompt chunk size for repro.cache
 
     def __post_init__(self):
         assert self.method in METHODS, self.method
         assert self.gen_len % self.block_size == 0
+        assert self.cache_chunk > 0
+        # the frozen-suffix refresh writes position-indexed over the
+        # whole buffer with nothing cached-valid; combining it with a
+        # frozen prompt region needs a third refresh variant — out of
+        # scope (EXPERIMENTS.md §Prefix caching)
+        assert not (self.prefix_cache and self.frozen_suffix), \
+            "prefix_cache and frozen_suffix are mutually exclusive"
 
     @property
     def effective_window(self) -> int:
@@ -132,6 +149,7 @@ class DecodeState:
     cache: Any = None
     valid_mask: Optional[np.ndarray] = None    # dkv only: (B, T) bool
     cached_mask: Optional[np.ndarray] = None   # dkv only: (B, T) bool
+    prefix_hit_tokens: Optional[np.ndarray] = None  # prefix_cache: (B,)
     nfe: int = 0
     q_tokens: int = 0
     kv_tokens: int = 0
@@ -182,10 +200,24 @@ class DiffusionDecoder:
     (legacy) or one compiled device-resident loop per block (fused)."""
 
     def __init__(self, cfg: ModelConfig, params, dcfg: DecodeConfig,
-                 mesh=None, data_axes=("data",), executor=None):
+                 mesh=None, data_axes=("data",), executor=None,
+                 prompt_cache=None):
         self.cfg = cfg
         self.dcfg = dcfg
         self.executor = executor
+        # cross-request chunk store (repro.cache.PrefixKVCache). May be
+        # None even in prefix_cache mode: the chunk-aligned prefill then
+        # still runs (and the tail refresh still reuses the prompt KV
+        # within the request) but nothing is shared across requests.
+        self.prompt_cache = prompt_cache
+        if dcfg.prefix_cache:
+            from repro.models.config import ATTN, ATTN_LOCAL
+            assert all(s.mixer in (ATTN, ATTN_LOCAL) for s in cfg.layout), \
+                ("prefix_cache needs an attention-only layout (recurrent "
+                 "states have no chunkable time axis)")
+            if prompt_cache is not None:
+                assert prompt_cache.chunk_tokens == dcfg.cache_chunk, \
+                    (prompt_cache.chunk_tokens, dcfg.cache_chunk)
         if executor is not None:
             # the placement layer owns the placed params and the mesh;
             # a decoder bound to an executor never touches raw params
@@ -318,6 +350,59 @@ class DiffusionDecoder:
             self._fns["step_ct"] = jax.jit(f)
         return self._fns["step_ct"]
 
+    def _chunk_prefill_fn(self):
+        """Prefix-cache prefill pass: one prompt chunk attending to
+        [cached prompt prefix || self] (chunk-causal across chunks,
+        bidirectional within). The chunk offset arrives as the dynamic
+        ``kv_valid`` array, so ONE compiled variant serves every chunk
+        of every prompt at a given (batch, chunk) shape. skip_head: the
+        prefill only needs KV, never logits."""
+        if "chunk_prefill" not in self._fns:
+            uk = self.dcfg.use_kernels
+
+            def f(p, toks, pos, cache, kv_valid):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="append", cache=cache,
+                                  kv_valid=kv_valid, skip_head=True,
+                                  use_kernels=uk)
+                return out.cache
+            self._fns["chunk_prefill"] = jax.jit(f)
+        return self._fns["chunk_prefill"]
+
+    def _tail_refresh_fn(self):
+        """Prefix-cache block refresh (fixed-schedule methods): a pass
+        over [generated prefix || query region] ONLY — the prompt KV
+        was computed at prefill (possibly assembled from the
+        cross-request store) and is attended via ``kv_valid`` instead
+        of being recomputed every block."""
+        if "tail_refresh" not in self._fns:
+            uk = self.dcfg.use_kernels
+
+            def f(p, toks, pos, cache, kv0):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="append", cache=cache, kv_valid=kv0,
+                                  use_kernels=uk)
+                return out.logits, out.cache
+            self._fns["tail_refresh"] = jax.jit(f)
+        return self._fns["tail_refresh"]
+
+    def _tail_refresh_ct_fn(self):
+        """Parallel-method tail refresh: same pass, fused head path so
+        only (conf, toks) for the block leave the jit. ``upto`` is the
+        in-pass offset of the current block (= generated prefix len)."""
+        if "tail_refresh_ct" not in self._fns:
+            uk, K = self.dcfg.use_kernels, self.dcfg.block_size
+
+            def f(p, toks, pos, cache, kv0, *, upto):
+                out = apply_model(self.cfg, p, tokens=toks, positions=pos,
+                                  mode="append", cache=cache, kv_valid=kv0,
+                                  skip_head=True, use_kernels=uk)
+                c, t = self._conf_from_hidden(p, out.logits[:, upto:upto + K])
+                return c, t, out.cache
+            self._fns["tail_refresh_ct"] = jax.jit(
+                f, static_argnames=("upto",))
+        return self._fns["tail_refresh_ct"]
+
     def _append_fn(self):
         if "append" not in self._fns:
             uk = self.dcfg.use_kernels
@@ -378,6 +463,16 @@ class DiffusionDecoder:
         reshaping (empirically verified in tests/test_serving.py)."""
         return self.dcfg.method != "dkv"
 
+    @property
+    def cache_carries_state(self) -> bool:
+        """True when the KV buffer holds state a block refresh does NOT
+        rewrite — dkv's position-indexed cache, or the prefix-cached
+        prompt region. Compaction/merge must then *gather* cache rows;
+        any other method adopts whatever right-shaped pool buffer it is
+        handed, because the next refresh rewrites it wholesale."""
+        return self.dcfg.method == "dkv" or (
+            self.dcfg.prefix_cache and self.dcfg.method != "vanilla")
+
     def jit_cache_size(self) -> int:
         """Total compiled-variant count across this decoder's step fns —
         the serving benchmark asserts it stays bounded by shape buckets
@@ -424,6 +519,19 @@ class DiffusionDecoder:
             state.cache = cache
         else:
             state.cache = self._alloc_cache(B, T)
+        if d.prefix_cache:
+            # chunk-aligned prompt prefill: assemble the longest
+            # cross-request cached prefix, compute only the novel tail.
+            # dkv rides the same path — its position-indexed masks mark
+            # the prompt valid/frozen exactly as the full-sequence
+            # prefill would, but the masked-region pass is skipped
+            # (those KV entries were never valid anyway).
+            self.prime_prompt_kv(state)
+            if d.method == "dkv":
+                state.valid_mask = np.zeros((B, T), bool)
+                state.valid_mask[:, :P] = True
+                state.cached_mask = state.valid_mask.copy()
+            return state
         if d.method == "dkv":
             # dKV prefill: one full-sequence pass (prompt + masks),
             # position-indexed cache; only the prompt KV is valid.
@@ -444,6 +552,88 @@ class DiffusionDecoder:
             state.cached_mask = state.valid_mask.copy()
         return state
 
+    def prime_prompt_kv(self, state: DecodeState) -> DecodeState:
+        """Prefix-cache prompt prefill (the chunk-aligned path): look
+        up the longest cached prefix per row, copy/assemble its KV into
+        the gang cache, run the model only over the uncached chunks
+        plus the unaligned remainder, and publish the freshly computed
+        chunks back to the store. Also the re-prime hook for resumed
+        (preempted) states, whose parked cache was dropped — their own
+        chunks are usually still in the store, so resume costs O(tail).
+
+        Exactness: an assembled chunk carries the bytes its original
+        prefill pass wrote, and a computed chunk sees only [assembled
+        prefix || its own tokens] — so cached and cold prefill are
+        bit-identical by construction (tests/test_cache.py)."""
+        d = self.dcfg
+        assert d.prefix_cache and d.method != "vanilla"
+        assert state.cache is not None
+        from repro.cache import slicing
+        B, P = state.batch, state.prompt_len
+        C = d.cache_chunk
+        n_chunks = P // C
+        store = self.prompt_cache
+        tp0 = time.perf_counter()
+        hits: list = [[] for _ in range(B)]
+        if store is not None and n_chunks:
+            hits = [store.match(state.x[b, :P]) for b in range(B)]
+        try:
+            # the gang computes chunks from the common hit depth: rows
+            # with deeper hits get those chunks recomputed in-batch
+            # (bit-equal to their stored values — batch invariance),
+            # rows at the min start there. The scheduler's hit-aware
+            # admission grouping keeps gangs hit-homogeneous so the min
+            # is rarely pessimistic.
+            n_hit = min(len(h) for h in hits)
+            if n_hit:
+                state.cache = slicing.assemble_batch(
+                    state.cache,
+                    [[n.payload for n in hits[b][:n_hit]]
+                     for b in range(B)])
+            fn = self._chunk_prefill_fn()
+            spans = [(c * C, (c + 1) * C) for c in range(n_hit, n_chunks)]
+            if P > n_chunks * C:
+                spans.append((n_chunks * C, P))   # unaligned remainder
+            for t0, t1 in spans:
+                pos = np.broadcast_to(
+                    np.arange(t0, t1, dtype=np.int32)[None], (B, t1 - t0))
+                state.cache = fn(self.params,
+                                 self._put_batch(state.x[:, t0:t1]),
+                                 self._put_batch(pos), state.cache,
+                                 self._put_batch(np.full((B,), t0,
+                                                         np.int32)))
+                state.nfe += 1
+                state.q_tokens += B * (t1 - t0)
+                state.kv_tokens += B * (t1 - t0) * t1
+            if spans:
+                jax.block_until_ready(jax.tree.leaves(state.cache)[0])
+                state.host_syncs += 1
+            # publish the chunks this gang computed (above what each
+            # row already had cached); rows repeating an earlier row's
+            # prompt — pad lanes replicate row 0 — skip the extraction
+            # entirely, the store would dedup their nodes anyway
+            if store is not None:
+                seen: set = set()
+                for b in range(B):
+                    key = state.x[b, :P].tobytes()
+                    start = len(hits[b])
+                    if n_chunks > start and key not in seen:
+                        kvs = [slicing.extract_row(state.cache, b,
+                                                   c * C, (c + 1) * C)
+                               for c in range(start, n_chunks)]
+                        store.insert(state.x[b, :P], start, kvs,
+                                     parent_chain=hits[b])
+                    seen.add(key)
+        finally:
+            # pins must die with this call even if a prefill pass
+            # raises — a leaked pin makes its chunk unevictable forever
+            if store is not None:
+                for h in hits:
+                    store.unpin(h)
+        state.prefix_hit_tokens = np.full((B,), n_hit * C, np.int32)
+        state.prefill_time += time.perf_counter() - tp0
+        return state
+
     def take_rows(self, state: DecodeState, rows, cache: Any = None,
                   alloc_cache: bool = True) -> DecodeState:
         """Extract rows into a standalone state (batch compaction /
@@ -461,6 +651,8 @@ class DiffusionDecoder:
             done=state.done[rows].copy(), prompt_len=state.prompt_len,
             n_blocks=state.n_blocks, block_idx=state.block_idx,
             steps_per_block=list(state.steps_per_block))
+        if state.prefix_hit_tokens is not None:
+            sub.prefix_hit_tokens = state.prefix_hit_tokens[rows].copy()
         if d.method == "dkv":
             # cache_take_rows *gathers* (XLA copies) — the sub-state
             # must never alias buffers of the gang it left: the gang's
@@ -469,6 +661,13 @@ class DiffusionDecoder:
             sub.cache = cache_take_rows(state.cache, rows)
             sub.valid_mask = state.valid_mask[rows].copy()
             sub.cached_mask = state.cached_mask[rows].copy()
+        elif self.cache_carries_state:
+            # prefix_cache: the prompt KV region must travel with the
+            # rows (the tail refresh never rewrites it). A parked state
+            # (alloc_cache=False) drops it instead — prime_prompt_kv
+            # re-primes on resume, usually from the store.
+            if alloc_cache or cache is not None:
+                sub.cache = cache_take_rows(state.cache, rows)
         elif d.method != "vanilla":
             if cache is not None:
                 sub.cache = cache
@@ -502,7 +701,22 @@ class DiffusionDecoder:
             steps_per_block=[max(vals) for vals in zip(
                 *(st.steps_per_block for st, _ in parts))]
             if ref.steps_per_block else [])
-        if self.dcfg.method != "vanilla":
+        if all(st.prefix_hit_tokens is not None for st, _ in parts):
+            sub.prefix_hit_tokens = np.concatenate(
+                [st.prefix_hit_tokens[rows] for st, rows in parts])
+        if self.cache_carries_state:
+            # prefix_cache: gather each part's rows (prompt KV travels)
+            # and concatenate along the batch axis (1 for scan-stacked
+            # groups, 0 for tail layers — see cache_take_rows)
+            gathered = [cache_take_rows(st.cache, rows)
+                        for st, rows in parts]
+            sub.cache = {
+                "scan": jax.tree.map(lambda *xs: jnp.concatenate(xs, 1),
+                                     *[g["scan"] for g in gathered]),
+                "tail": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                     *[g["tail"] for g in gathered]),
+            }
+        elif self.dcfg.method != "vanilla":
             sub.cache = cache if cache is not None \
                 else self._alloc_cache(sub.batch, ref.total_len)
         return sub
@@ -580,7 +794,7 @@ class DiffusionDecoder:
             return x, committed
 
         def f(p, x, committed, done, cache, qpos_b, valid_mask, cached_mask,
-              *, bstart):
+              *, bstart, pstart):
             B, T = x.shape
             prefix_len = bstart
             vsums = jnp.zeros((steps_cap,), jnp.int32)  # dkv kv-size trace
@@ -649,13 +863,25 @@ class DiffusionDecoder:
             else:
                 # prefix / fast / streaming: block-start refresh (paper
                 # §3.3) outside the loop — it has a different query shape
-                # and is the only step that writes the cache
+                # and is the only step that writes the cache. With
+                # prefix_cache the pass starts at the prompt boundary
+                # (pstart): the prompt KV was computed at prefill and is
+                # attended via kv_valid, never recomputed.
                 pref_pos = jnp.broadcast_to(
-                    jnp.arange(prefix_len, dtype=jnp.int32)[None],
-                    (B, prefix_len))
+                    jnp.arange(pstart if d.prefix_cache else 0, prefix_len,
+                               dtype=jnp.int32)[None],
+                    (B, prefix_len - (pstart if d.prefix_cache else 0)))
                 full_pos = jnp.concatenate([pref_pos, qpos_b], axis=1)
                 full_toks = jnp.take_along_axis(x, full_pos, axis=1)
-                if frozen:
+                if d.prefix_cache:
+                    out = apply_model(cfg, p, tokens=full_toks,
+                                      positions=full_pos, mode="append",
+                                      cache=cache,
+                                      kv_valid=jnp.full((B,), pstart,
+                                                        jnp.int32),
+                                      skip_head=parallel, use_kernels=uk)
+                    valid = jnp.full((B,), prefix_len, jnp.int32)
+                elif frozen:
                     out = apply_model(cfg, p, tokens=full_toks,
                                       positions=full_pos, mode="append",
                                       cache=cache,
@@ -674,7 +900,8 @@ class DiffusionDecoder:
                                       skip_head=parallel, use_kernels=uk)
                     valid = jnp.full((B,), prefix_len, jnp.int32)
                 cache = out.cache
-                blk_out = out.logits[:, prefix_len:prefix_len + K]
+                boff = prefix_len - pstart if d.prefix_cache else prefix_len
+                blk_out = out.logits[:, boff:boff + K]
                 if parallel:
                     conf, toks = self._conf_from_hidden(p, blk_out)
                 else:
@@ -752,7 +979,7 @@ class DiffusionDecoder:
         donate = (4,) if (self.executor is not None
                           and self.executor.donate_cache
                           and d.method != "vanilla") else ()
-        self._fns["fused"] = jax.jit(f, static_argnames=("bstart",),
+        self._fns["fused"] = jax.jit(f, static_argnames=("bstart", "pstart"),
                                      donate_argnums=donate)
         return self._fns["fused"]
 
@@ -780,7 +1007,8 @@ class DiffusionDecoder:
             self.params, self._put_batch(state.x),
             self._put_batch(state.committed), self._put_batch(state.done),
             state.cache, self._put_batch(qpos_b),
-            vm, cm, bstart=bstart)
+            vm, cm, bstart=bstart,
+            pstart=P if d.prefix_cache else 0)
 
         # the ONE host sync for this block (np.array: writable copies —
         # the scheduler and finalize mutate these buffers in place)
@@ -805,8 +1033,11 @@ class DiffusionDecoder:
             for vs in np.asarray(vsums)[:steps]:
                 state.kv_tokens += B * Sq * (int(vs) + Sq)
         elif steps > 0:
-            state.q_tokens += B * (prefix_len + Sq)
-            state.kv_tokens += B * (prefix_len + Sq) ** 2
+            # cached mode: the refresh pass covers only the generated
+            # prefix + query (the prompt is attended, not recomputed)
+            ref_q = (prefix_len - P if d.prefix_cache else prefix_len) + Sq
+            state.q_tokens += B * ref_q
+            state.kv_tokens += B * ref_q * (prefix_len + Sq)
             if frozen:
                 state.q_tokens += (steps - 1) * B * K
                 state.kv_tokens += (steps - 1) * B * K * (prefix_len + Sq + K)
@@ -878,6 +1109,30 @@ class DiffusionDecoder:
                 cached_mask |= newly_frozen
                 valid_mask |= newly_frozen
                 kv_tokens += B * Sq * (valid_mask.sum() // B + Sq)
+            elif step == 1 and d.prefix_cache:
+                # prefix-cache tail refresh: [generated prefix || query]
+                # only; the prefill-computed prompt KV is attended via
+                # kv_valid=P and never recomputed (see _tail_refresh_*)
+                upto = prefix_len - P
+                q_tokens += B * (upto + Sq)
+                full_pos = np.concatenate(
+                    [np.arange(P, prefix_len, dtype=np.int32), qpos])
+                full_pos = np.broadcast_to(full_pos[None], (B, upto + Sq))
+                full_toks = self._put_batch(
+                    x[np.arange(B)[:, None], full_pos])
+                kv0 = self._put_batch(np.full((B,), P, np.int32))
+                if d.parallel:
+                    cf, tk, cache = self._tail_refresh_ct_fn()(
+                        self.params, full_toks, self._put_batch(full_pos),
+                        cache, kv0, upto=upto)
+                    conf_toks = (cf, tk)
+                else:
+                    logits, cache = self._tail_refresh_fn()(
+                        self.params, full_toks, self._put_batch(full_pos),
+                        cache, kv0)
+                    blk_logits = logits[:, upto:upto + K]
+                valid = jnp.full((B,), prefix_len, jnp.int32)
+                kv_tokens += B * (upto + Sq) * (prefix_len + Sq)
             elif step == 1:
                 # block-start refresh (paper §3.3): prefix + query
                 # region in one encode; caches the prefix KV (and,

@@ -58,6 +58,16 @@ def main():
     ap.add_argument("--host-loop", action="store_true",
                     help="legacy per-step host denoise loop instead of "
                          "the fused device-resident loop")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix KV cache (repro.cache): "
+                         "chunk-aligned prompt prefill, radix-tree "
+                         "content matching, cache-affinity routing "
+                         "with --engines > 1")
+    ap.add_argument("--cache-chunk", type=int, default=16,
+                    help="prefix-cache chunk size in prompt tokens")
+    ap.add_argument("--cache-bytes", type=int, default=256 << 20,
+                    help="prefix-cache byte budget per engine (LRU "
+                         "eviction beyond it)")
     ap.add_argument("--http", type=int, default=0, metavar="PORT",
                     help="serve over HTTP on this port instead of the "
                          "synthetic in-process workload (continuous "
@@ -89,6 +99,9 @@ def main():
         raise SystemExit("--mesh needs continuous mode or --http (the "
                          "placement layer drives the continuous engine; "
                          "the legacy batch engine is single-device)")
+    if args.prefix_cache and args.method == "vanilla":
+        raise SystemExit("--prefix-cache has no effect with --method "
+                         "vanilla (no KV cache to reuse)")
     mesh_dims = _parse_mesh(args.mesh) if args.mesh else None
 
     if args.force_host_devices:
@@ -126,7 +139,9 @@ def main():
                                            batch_size=32, seq_len=44))
     d = DecodeConfig(method=args.method, gen_len=args.gen_len, block_size=8,
                      window=args.window, tau0=args.tau0, alpha=args.alpha,
-                     use_kernels=args.use_kernels, fused=not args.host_loop)
+                     use_kernels=args.use_kernels, fused=not args.host_loop,
+                     prefix_cache=args.prefix_cache,
+                     cache_chunk=args.cache_chunk)
     tok = ByteTokenizer(cfg.vocab_size)
 
     # placement: one DecodeExecutor per engine submesh (None = today's
@@ -141,8 +156,18 @@ def main():
 
     def make_engine(ex):
         from repro.serving import ContinuousEngine
+        store = None
+        if args.prefix_cache:
+            # one store per engine (placement-bound, like the KV pool);
+            # the router's cache-affinity policy relies on that split
+            from repro.cache import HOST_PLACEMENT, PrefixKVCache
+            store = PrefixKVCache(
+                chunk_tokens=args.cache_chunk, max_bytes=args.cache_bytes,
+                placement=ex.placement if ex is not None
+                else HOST_PLACEMENT)
         return ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
-                                tokenizer=tok, executor=ex)
+                                tokenizer=tok, executor=ex,
+                                prefix_cache=store)
 
     if args.http:
         from repro.server import run as run_http
@@ -176,6 +201,8 @@ def main():
               f"ttfb_p50={snap['ttfb_p50_s']*1e3:.0f}ms "
               f"occ={snap['mean_occupancy']:.2f} "
               f"merges={snap['gang_merges']} "
+              + (f"cache_hit_toks={snap['prefix_cache_hit_tokens']} "
+                 if args.prefix_cache else "") +
               f"syncs/blk={snap['host_syncs_per_block']:.2f} "
               f"steps/blk={snap['device_steps_per_block']:.2f} "
               f"jit_cache={eng.jit_cache_size()}")

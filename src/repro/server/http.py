@@ -94,22 +94,38 @@ class HttpFrontend:
 
     async def _client(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
+        """Serve requests off one socket until the client (or a
+        streaming response, or drain) ends the connection — HTTP/1.1
+        keep-alive, so small-prompt clients don't pay TCP setup per
+        request. An idle keep-alive socket that times out waiting for
+        the *next* request is closed silently (only the first request
+        earns a 408: before it, timing out means a slow client, not an
+        idle one)."""
         task = asyncio.current_task()
         self._conns.add(task)
+        first = True
         try:
-            try:
-                req = await asyncio.wait_for(
-                    wire.read_request(reader),
-                    timeout=self.request_timeout_s)
-            except asyncio.TimeoutError:
-                writer.write(wire.error_response(408, "request timeout"))
-                return
-            except BadRequest as e:
-                writer.write(wire.error_response(400, e.message))
-                return
-            if req is None:
-                return
-            await self._route(req, reader, writer)
+            while True:
+                try:
+                    req = await asyncio.wait_for(
+                        wire.read_request(reader),
+                        timeout=self.request_timeout_s)
+                except asyncio.TimeoutError:
+                    if first:
+                        writer.write(wire.error_response(
+                            408, "request timeout"))
+                    return
+                except BadRequest as e:
+                    writer.write(wire.error_response(400, e.message))
+                    return
+                if req is None:
+                    return
+                # drain closes after the in-flight response; a fresh
+                # accept during drain still gets its 503 below
+                keep = req.keep_alive and not self._draining
+                if not await self._route(req, reader, writer, keep):
+                    return
+                first = False
         except (ConnectionResetError, BrokenPipeError):
             pass
         except asyncio.CancelledError:
@@ -128,46 +144,60 @@ class HttpFrontend:
             except Exception:
                 pass
 
-    async def _route(self, req: wire.HttpRequest, reader, writer) -> None:
+    async def _route(self, req: wire.HttpRequest, reader, writer,
+                     keep: bool) -> bool:
+        """Handle one request; returns whether the connection survives
+        (False after a streaming response, whose end-of-body is the
+        connection close itself)."""
         if req.path == "/healthz":
             if req.method != "GET":
-                writer.write(wire.error_response(405, "use GET"))
-                return
-            writer.write(wire.response(200, self._health()))
+                writer.write(wire.error_response(405, "use GET",
+                                                 keep_alive=keep))
+            else:
+                writer.write(wire.response(200, self._health(),
+                                           keep_alive=keep))
         elif req.path == "/metrics":
             if req.method != "GET":
-                writer.write(wire.error_response(405, "use GET"))
-                return
-            writer.write(wire.response(
-                200, self._metrics_text(),
-                content_type="text/plain; version=0.0.4"))
+                writer.write(wire.error_response(405, "use GET",
+                                                 keep_alive=keep))
+            else:
+                writer.write(wire.response(
+                    200, self._metrics_text(),
+                    content_type="text/plain; version=0.0.4",
+                    keep_alive=keep))
         elif req.path == "/v1/completions":
             if req.method != "POST":
-                writer.write(wire.error_response(405, "use POST"))
-                return
-            await self._completions(req, reader, writer)
+                writer.write(wire.error_response(405, "use POST",
+                                                 keep_alive=keep))
+            else:
+                keep = await self._completions(req, reader, writer, keep)
         else:
-            writer.write(wire.error_response(404, f"no route {req.path}"))
+            writer.write(wire.error_response(404, f"no route {req.path}",
+                                             keep_alive=keep))
         await writer.drain()
+        return keep
 
     # ------------------------------------------------------ completions
 
     async def _completions(self, req: wire.HttpRequest,
-                           reader, writer) -> None:
+                           reader, writer, keep: bool) -> bool:
+        """Returns whether the connection can serve another request."""
         if self._draining:
             writer.write(wire.error_response(
                 503, "server is draining", {"Retry-After": "5"}))
-            return
+            return False
         try:
             body = json.loads(req.body.decode("utf-8") or "{}")
         except (json.JSONDecodeError, UnicodeDecodeError):
-            writer.write(wire.error_response(400, "body is not valid JSON"))
-            return
+            writer.write(wire.error_response(400, "body is not valid JSON",
+                                             keep_alive=keep))
+            return keep
         try:
             sreq = ServerRequest.from_json(body)
         except BadRequest as e:
-            writer.write(wire.error_response(400, e.message))
-            return
+            writer.write(wire.error_response(400, e.message,
+                                             keep_alive=keep))
+            return keep
         aioloop = asyncio.get_running_loop()
         events: asyncio.Queue = asyncio.Queue()
 
@@ -179,12 +209,14 @@ class HttpFrontend:
         except AdmissionRejected as e:
             writer.write(wire.error_response(
                 429, e.message,
-                {"Retry-After": str(int(math.ceil(e.retry_after_s)))}))
-            return
+                {"Retry-After": str(int(math.ceil(e.retry_after_s)))},
+                keep_alive=keep))
+            return keep
         if sreq.stream:
             await self._stream_response(ticket, events, reader, writer)
-        else:
-            await self._json_response(ticket, events, writer)
+            return False       # chunked SSE ends with the connection
+        await self._json_response(ticket, events, writer, keep)
+        return keep
 
     async def _wait_disconnect(self, reader) -> None:
         """Resolves on EOF from the client. Only *streaming* responses
@@ -205,10 +237,10 @@ class HttpFrontend:
                 return
 
     async def _json_response(self, ticket: Ticket, events,
-                             writer) -> None:
+                             writer, keep: bool = False) -> None:
         comp = await self._await_done(events)
         writer.write(wire.response(
-            200, self._completion_json(comp, ticket)))
+            200, self._completion_json(comp, ticket), keep_alive=keep))
         await writer.drain()
 
     @staticmethod
@@ -264,6 +296,7 @@ class HttpFrontend:
             "cancelled": comp.cancelled,
             "latency_s": comp.latency_s, "ttfb_s": comp.ttfb_s,
             "queue_s": comp.queue_s, "nfe": comp.nfe,
+            "cache_hit_tokens": comp.cache_hit_tokens,
         }
 
     # ------------------------------------------------------ health/metrics
@@ -318,6 +351,18 @@ class HttpFrontend:
              "counter", "Cancelled requests whose cause was timeout_s.")
         emit("repro_gang_merges_total", tot("gang_merges"), "counter",
              "Cross-gang straggler merges at block boundaries.")
+        emit("repro_prefix_cache_hits_total", tot("prefix_cache_hits"),
+             "counter", "Requests whose prefill reused cached prompt KV.")
+        emit("repro_prefix_cache_hit_tokens_total",
+             tot("prefix_cache_hit_tokens"), "counter",
+             "Prompt tokens served from the cross-request prefix cache.")
+        emit("repro_prefix_cache_evictions_total",
+             tot("prefix_cache_evictions"), "counter",
+             "Prefix-cache chunks evicted (LRU under the byte budget).")
+        emit("repro_prefix_cache_bytes", tot("prefix_cache_bytes"),
+             "gauge", "Resident prefix-cache chunk KV bytes.")
+        emit("repro_prefix_cache_chunks", tot("prefix_cache_nodes"),
+             "gauge", "Resident prefix-cache chunks (radix-tree nodes).")
         emit("repro_queue_depth", tot("queue_depth"), "gauge",
              "Requests queued (front end + scheduler), not in a slot.")
         emit("repro_inflight", self.loop.inflight, "gauge",
@@ -346,6 +391,15 @@ class HttpFrontend:
                      "Generated tokens per engine.", "{}"),
                     ("gang_merges_total", "gang_merges", "counter",
                      "Cross-gang merges per engine.", "{}"),
+                    ("cache_hits_total", "prefix_cache_hits", "counter",
+                     "Prefix-cache request hits per engine.", "{}"),
+                    ("cache_hit_tokens_total", "prefix_cache_hit_tokens",
+                     "counter", "Prefix-cache tokens reused per engine.",
+                     "{}"),
+                    ("cache_evictions_total", "prefix_cache_evictions",
+                     "counter", "Prefix-cache evictions per engine.", "{}"),
+                    ("cache_bytes", "prefix_cache_bytes", "gauge",
+                     "Resident prefix-cache bytes per engine.", "{}"),
                     ("throughput_tok_per_s", "throughput_tok_s", "gauge",
                      "Tokens/s per engine.", "{:.6f}"),
                     ("mean_occupancy", "mean_occupancy", "gauge",

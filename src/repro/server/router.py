@@ -8,13 +8,19 @@ loop owns one ``ContinuousEngine`` — typically bound to its own
 ``DecodeExecutor`` submesh, so the engines decode on disjoint devices
 and the router is the only place where they meet.
 
-Placement policy: **least-loaded by live rows**. A request is pinned
-to one engine at submit time (gang batching is per-scheduler, so
-migrating later would restart the request); the router picks the loop
-with the fewest live decode rows, breaking ties by total in-flight
-count and then by index. Reads of another thread's scheduler state are
-racy by construction — this is a load *heuristic*, and a one-tick
-stale read costs at most a slightly uneven split.
+Placement policy: **cache affinity, then least-loaded**. Each engine
+owns a placement-bound cross-request prefix KV store (``repro.cache``)
+— warming is per-engine, so routing a request to the engine whose
+store holds the longest matching prompt prefix converts its prefill
+from O(prompt) to O(novel tail). The router asks every engine for its
+match length (a pure radix-tree walk, no pin) and prefers the deepest
+hit; ties — including the everything-cold case, and any engine with
+caching off — fall back to fewest live decode rows, then total
+in-flight count, then index. A request is pinned to one engine at
+submit time (gang batching is per-scheduler, so migrating later would
+restart the request). Reads of another thread's scheduler/store state
+are racy by construction — these are *heuristics*, and a one-tick
+stale read costs at most a slightly uneven split or a missed hit.
 
 Admission: the picked loop may reject (its bounded budget is full);
 the router then tries the remaining loops in load order and only
@@ -79,16 +85,30 @@ class EngineRouter:
 
     # ---------------------------------------------------- routing
 
-    def _load_order(self) -> List[EngineLoop]:
+    def _load_order(self, req: ServerRequest = None) -> List[EngineLoop]:
+        hits = [0] * len(self.loops)
+        probe = (req is not None and len(self.loops) > 1
+                 and any(getattr(lp.engine, "prefix_cache", None) is not None
+                         for lp in self.loops))
+        if probe:
+            try:
+                # tokenize once, probe every store with the ids —
+                # engines share one tokenizer family by construction
+                toks = self.loops[0].engine.tok.encode(req.prompt)
+                for i, lp in enumerate(self.loops):
+                    hits[i] = lp.engine.expected_prefix_hit(toks)
+            except Exception:         # affinity is best-effort, never fatal
+                log.exception("prefix-hit probe failed")
+
         def load(item):
             i, lp = item
-            return (lp.engine.scheduler.live_rows, lp.inflight, i)
+            return (-hits[i], lp.engine.scheduler.live_rows, lp.inflight, i)
         return [lp for _, lp in
                 sorted(enumerate(self.loops), key=lambda it: load(it))]
 
     def submit(self, req: ServerRequest,
                deliver: Callable[[tuple], None]) -> Ticket:
-        order = self._load_order()
+        order = self._load_order(req)
         last_reject = None
         for lp in order:
             try:

@@ -1,12 +1,17 @@
 """Minimal HTTP/1.1 + SSE wire handling on raw asyncio streams.
 
 No dependency beyond the stdlib: the container policy forbids new
-packages, and the subset of HTTP this server speaks (one request per
-connection, ``Content-Length`` bodies in, fixed-length JSON or chunked
-SSE out) is small enough that hand-rolling it is simpler than vendoring
-a framework. Every connection is ``Connection: close`` — the load we
-care about is long-lived streaming responses, where keep-alive buys
-nothing and complicates disconnect detection.
+packages, and the subset of HTTP this server speaks (``Content-Length``
+bodies in, fixed-length JSON or chunked SSE out) is small enough that
+hand-rolling it is simpler than vendoring a framework.
+
+Fixed-length responses honor HTTP/1.1 persistent connections
+(``Connection: keep-alive``, the 1.1 default): per-request TCP setup
+dominates small-prompt TTFB, so clients issuing many short completions
+reuse one socket (``repro.server.client.ClientSession``). Streaming
+(SSE) responses stay ``Connection: close`` — the client's only way to
+abandon a stream mid-flight is dropping the connection, and that
+disconnect-as-cancel signal must stay unambiguous.
 """
 from __future__ import annotations
 
@@ -34,6 +39,16 @@ class HttpRequest:
     path: str
     headers: Dict[str, str]            # keys lower-cased
     body: bytes
+    version: str = "HTTP/1.1"
+
+    @property
+    def keep_alive(self) -> bool:
+        """Persistent-connection semantics: 1.1 defaults to keep-alive
+        unless the client says close; 1.0 requires an explicit opt-in."""
+        conn = self.headers.get("connection", "").lower()
+        if self.version == "HTTP/1.0":
+            return "keep-alive" in conn
+        return "close" not in conn
 
 
 async def read_request(reader: asyncio.StreamReader) \
@@ -50,7 +65,7 @@ async def read_request(reader: asyncio.StreamReader) \
     parts = line.decode("latin1").strip().split()
     if len(parts) != 3 or not parts[2].startswith("HTTP/1."):
         raise BadRequest("malformed request line")
-    method, path, _version = parts
+    method, path, version = parts
     headers: Dict[str, str] = {}
     total = len(line)
     while True:
@@ -79,13 +94,17 @@ async def read_request(reader: asyncio.StreamReader) \
                 return None
     elif headers.get("transfer-encoding"):
         raise BadRequest("chunked request bodies are not supported")
-    return HttpRequest(method, path.split("?", 1)[0], headers, body)
+    return HttpRequest(method, path.split("?", 1)[0], headers, body,
+                       version)
 
 
 def response(status: int, body: Union[bytes, dict, str] = b"",
              content_type: str = "application/json",
-             extra_headers: Dict[str, str] = None) -> bytes:
-    """Fixed-length response, ready to write."""
+             extra_headers: Dict[str, str] = None,
+             keep_alive: bool = False) -> bytes:
+    """Fixed-length response, ready to write. ``keep_alive`` leaves the
+    connection open for the client's next request (the Content-Length
+    framing makes that safe); default remains close."""
     if isinstance(body, dict):
         body = (json.dumps(body) + "\n").encode()
     elif isinstance(body, str):
@@ -93,16 +112,17 @@ def response(status: int, body: Union[bytes, dict, str] = b"",
     head = [f"HTTP/1.1 {status} {REASONS.get(status, 'Unknown')}",
             f"Content-Type: {content_type}",
             f"Content-Length: {len(body)}",
-            "Connection: close"]
+            f"Connection: {'keep-alive' if keep_alive else 'close'}"]
     for k, v in (extra_headers or {}).items():
         head.append(f"{k}: {v}")
     return ("\r\n".join(head) + "\r\n\r\n").encode("latin1") + body
 
 
 def error_response(status: int, message: str,
-                   extra_headers: Dict[str, str] = None) -> bytes:
+                   extra_headers: Dict[str, str] = None,
+                   keep_alive: bool = False) -> bytes:
     return response(status, {"error": message},
-                    extra_headers=extra_headers)
+                    extra_headers=extra_headers, keep_alive=keep_alive)
 
 
 SSE_HEADER = (b"HTTP/1.1 200 OK\r\n"

@@ -8,6 +8,8 @@ Layering:
     DecodeExecutor    — placement layer: one mesh; sharded params/caches,
                         gang submit/harvest, donation policy
     PrefixKVPool      — shape- and placement-bucketed KV buffer reuse
+    PrefixKVCache     — cross-request content-addressed prompt KV reuse
+                        (repro.cache; enabled by DecodeConfig.prefix_cache)
     StreamRouter      — per-block chunk callbacks / iterators
     ServeMetrics      — TTFB, latency percentiles, occupancy, NFE
 
@@ -15,6 +17,7 @@ Built on the resumable ``DiffusionDecoder.prefill`` / ``decode_block``
 API in ``repro.core.decoder``. The legacy synchronous path survives as
 ``repro.core.engine.ServingEngine(mode="batch")``.
 """
+from repro.cache import PrefixKVCache
 from repro.serving.engine import ContinuousEngine
 from repro.serving.executor import DecodeExecutor
 from repro.serving.metrics import RequestMetrics, ServeMetrics, percentile
@@ -26,7 +29,8 @@ from repro.serving.types import (BlockChunk, Completion, ServeRequest,
 
 __all__ = [
     "ContinuousEngine", "DecodeExecutor", "BlockScheduler", "Gang",
-    "PrefixKVPool", "StreamRouter", "RequestStream", "ServeMetrics",
+    "PrefixKVPool", "PrefixKVCache", "StreamRouter", "RequestStream",
+    "ServeMetrics",
     "RequestMetrics", "percentile", "BlockChunk", "Completion",
     "ServeRequest", "round_up_blocks",
 ]

@@ -35,7 +35,7 @@ class ContinuousEngine:
                  pool: Optional[PrefixKVPool] = None,
                  max_waiting: Optional[int] = None,
                  tokenizer=None, mesh=None, pad_pow2: bool = False,
-                 executor=None):
+                 executor=None, prefix_cache=None):
         self.cfg = cfg
         self.dcfg = dcfg
         self.executor = executor
@@ -47,7 +47,11 @@ class ContinuousEngine:
         self.scheduler = BlockScheduler(
             cfg, params, dcfg, max_slots=max_slots, max_gang=max_gang,
             pool=self.pool, max_waiting=max_waiting, tokenizer=self.tok,
-            mesh=mesh, pad_pow2=pad_pow2, executor=executor)
+            mesh=mesh, pad_pow2=pad_pow2, executor=executor,
+            prefix_cache=prefix_cache)
+        # cross-request prefix KV store (None unless dcfg.prefix_cache;
+        # the scheduler creates and owns placement binding)
+        self.prefix_cache = self.scheduler.prefix_cache
         self.router = StreamRouter()
         self.metrics = ServeMetrics(max_slots=self.scheduler.max_slots)
         self.stats = defaultdict(float)    # legacy ServingEngine keys
@@ -65,6 +69,17 @@ class ContinuousEngine:
             self.metrics.admission_rejects += 1
             raise
         return req.uid
+
+    def expected_prefix_hit(self, prompt: Union[str, np.ndarray]) -> int:
+        """Longest prefix (tokens) of ``prompt`` resident in this
+        engine's cross-request cache. 0 when caching is off. Pure read
+        over the store — the multi-engine router calls it from the
+        asyncio thread as its cache-affinity signal."""
+        if self.prefix_cache is None:
+            return 0
+        toks = self.tok.encode(prompt) if isinstance(prompt, str) \
+            else np.asarray(prompt, np.int32)
+        return self.prefix_cache.match_len(toks)
 
     def preempt(self, uid: int) -> None:
         self.scheduler.preempt(uid)
@@ -109,6 +124,11 @@ class ContinuousEngine:
         self.stats["time_s"] += dt
         self.metrics.queue_depth = len(self.scheduler.waiting)
         self.metrics.gang_merges = self.scheduler.merges
+        if self.prefix_cache is not None:
+            st = self.prefix_cache.stats()
+            self.metrics.prefix_cache_bytes = st["bytes"]
+            self.metrics.prefix_cache_evictions = st["evictions"]
+            self.metrics.prefix_cache_nodes = st["nodes"]
         return completions
 
     def _record(self, comp: Completion) -> None:
@@ -116,7 +136,11 @@ class ContinuousEngine:
             uid=comp.uid, queue_s=comp.queue_s, ttfb_s=comp.ttfb_s,
             latency_s=comp.latency_s, n_tokens=comp.n_tokens,
             nfe=comp.nfe, n_blocks=comp.n_blocks,
-            host_syncs=comp.host_syncs, logit_syncs=comp.logit_syncs))
+            host_syncs=comp.host_syncs, logit_syncs=comp.logit_syncs,
+            cache_hit_tokens=comp.cache_hit_tokens))
+        if comp.cache_hit_tokens > 0:
+            self.metrics.prefix_cache_hits += 1
+            self.metrics.prefix_cache_hit_tokens += comp.cache_hit_tokens
         if comp.cancelled:
             self.metrics.cancelled += 1
         self.stats["requests"] += 1

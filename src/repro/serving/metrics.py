@@ -24,6 +24,7 @@ class RequestMetrics:
     n_blocks: int
     host_syncs: int = 0   # device->host sync points while the row was live
     logit_syncs: int = 0  # ... of which were full (B, K, V) logit copies
+    cache_hit_tokens: int = 0  # prompt KV tokens reused from repro.cache
 
 
 @dataclasses.dataclass
@@ -45,6 +46,15 @@ class ServeMetrics:
     cancelled: int = 0                 # explicit / disconnect / deadline
     deadline_misses: int = 0           # cancels whose cause was timeout_s
     gang_merges: int = 0               # cross-gang straggler merges
+    # cross-request prefix cache (repro.cache): request-level hit
+    # counters accumulate per completion; bytes/evictions/nodes are
+    # gauges mirrored from the store each engine step
+    prefix_cache_hits: int = 0         # completed requests with a warm
+                                       # prefill (cache_hit_tokens > 0)
+    prefix_cache_hit_tokens: int = 0   # prompt tokens served from cache
+    prefix_cache_evictions: int = 0    # chunks evicted (LRU, byte budget)
+    prefix_cache_bytes: int = 0        # resident chunk KV bytes
+    prefix_cache_nodes: int = 0        # resident chunks
 
     def sample_tick(self, live_rows: int, tick_dt: float) -> None:
         self.ticks += 1
@@ -105,6 +115,11 @@ class ServeMetrics:
             "cancelled": self.cancelled,
             "deadline_misses": self.deadline_misses,
             "gang_merges": self.gang_merges,
+            "prefix_cache_hits": self.prefix_cache_hits,
+            "prefix_cache_hit_tokens": self.prefix_cache_hit_tokens,
+            "prefix_cache_evictions": self.prefix_cache_evictions,
+            "prefix_cache_bytes": self.prefix_cache_bytes,
+            "prefix_cache_nodes": self.prefix_cache_nodes,
             "latency_p50_s": percentile(lat, 50),
             "latency_p99_s": percentile(lat, 99),
             "ttfb_p50_s": percentile(ttfb, 50),

@@ -42,6 +42,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.cache import PrefixKVCache
+from repro.cache.store import HOST_PLACEMENT
 from repro.core.decoder import (DecodeConfig, DecodeState, DiffusionDecoder,
                                 eos_truncate)
 from repro.models.config import ModelConfig
@@ -103,7 +105,8 @@ class BlockScheduler:
                  max_waiting: Optional[int] = None,
                  tokenizer=None, mesh=None, pad_pow2: bool = False,
                  executor=None, batch_multiple: Optional[int] = None,
-                 merge_gangs: bool = True):
+                 merge_gangs: bool = True,
+                 prefix_cache: Optional[PrefixKVCache] = None):
         self.cfg = cfg
         self.params = params
         self.dcfg = dcfg
@@ -135,6 +138,36 @@ class BlockScheduler:
                 f"(pool.executor={pool.executor!r}, "
                 f"scheduler executor={executor!r})")
         self.pool = pool
+        # cross-request prefix KV store (repro.cache): like the pool,
+        # one store per executor placement — chunk KV shapes/numerics
+        # are mesh-specific, so a store warmed on one mesh must never
+        # feed a decoder driving another
+        placement = (executor.placement if executor is not None
+                     else HOST_PLACEMENT)
+        # vanilla has no KV cache at all — a store could never be
+        # filled or read, so it is not silently carried: the scheduler
+        # runs storeless (no probes, no hit-keyed admission groups)
+        use_store = dcfg.prefix_cache and dcfg.method != "vanilla"
+        if prefix_cache is not None and not use_store:
+            raise ValueError(
+                "a PrefixKVCache store needs DecodeConfig.prefix_cache "
+                "and a non-vanilla method "
+                f"(prefix_cache={dcfg.prefix_cache}, "
+                f"method={dcfg.method!r})")
+        if use_store and prefix_cache is None:
+            prefix_cache = PrefixKVCache(chunk_tokens=dcfg.cache_chunk,
+                                         placement=placement)
+        if prefix_cache is not None:
+            if tuple(prefix_cache.placement) != tuple(placement):
+                raise ValueError(
+                    "PrefixKVCache must be bound to the scheduler's "
+                    f"executor placement (store={prefix_cache.placement}, "
+                    f"scheduler={placement})")
+            if prefix_cache.chunk_tokens != dcfg.cache_chunk:
+                raise ValueError(
+                    f"PrefixKVCache chunk {prefix_cache.chunk_tokens} != "
+                    f"DecodeConfig.cache_chunk {dcfg.cache_chunk}")
+        self.prefix_cache = prefix_cache if use_store else None
         self.max_waiting = max_waiting
         self.tok = tokenizer
         self.mesh = mesh if executor is None else executor.mesh
@@ -157,7 +190,7 @@ class BlockScheduler:
             d = dataclasses.replace(self.dcfg, gen_len=gen_len)
             self._decoders[gen_len] = DiffusionDecoder(
                 self.cfg, self.params, d, mesh=self.mesh,
-                executor=self.executor)
+                executor=self.executor, prompt_cache=self.prefix_cache)
         return self._decoders[gen_len]
 
     def _pad_batch(self, n: int) -> int:
@@ -194,6 +227,12 @@ class BlockScheduler:
         self._uid += 1
         req = ServeRequest(self._uid, np.asarray(prompt_tokens, np.int32),
                            gen_len, max_tokens, time.perf_counter())
+        if self.prefix_cache is not None:
+            # expected hit length: reported up the stack (router
+            # affinity, Completion) and the basis of hit-aware
+            # admission grouping — see _group_key
+            req.expected_hit_tokens = self.prefix_cache.match_len(
+                req.prompt_tokens)
         self.waiting.append(req)
         return req
 
@@ -339,19 +378,30 @@ class BlockScheduler:
             parts.append((parts[0][0],
                           [parts[0][1][0]] * (new_b - len(reqs))))
             reqs.extend([None] * (new_b - len(reqs)))
-        # release source buffers BEFORE acquiring the merged one: their
-        # contents are never read (merge_rows only needs a right-shaped
-        # backing; the next refresh rewrites it), and a matching-shape
-        # release turns the acquire into a guaranteed pool hit
-        for g in gangs:
-            if g.state.cache is not None:
-                self.pool.release(g.state.batch, T, g.state.cache)
-                g.state.cache = None
-            self.gangs.remove(g)
-        cache = None
-        if decoder.dcfg.method != "vanilla":
-            cache = self.pool.acquire(new_b, T)
-        state = decoder.merge_rows(parts, cache=cache)
+        if decoder.cache_carries_state:
+            # prefix_cache: the sources' prompt KV must be read by the
+            # merge gather — merge first, release after
+            state = decoder.merge_rows(parts)
+            for g in gangs:
+                if g.state.cache is not None:
+                    self.pool.release(g.state.batch, T, g.state.cache)
+                    g.state.cache = None
+                self.gangs.remove(g)
+        else:
+            # release source buffers BEFORE acquiring the merged one:
+            # their contents are never read (merge_rows only needs a
+            # right-shaped backing; the next refresh rewrites it), and a
+            # matching-shape release turns the acquire into a
+            # guaranteed pool hit
+            for g in gangs:
+                if g.state.cache is not None:
+                    self.pool.release(g.state.batch, T, g.state.cache)
+                    g.state.cache = None
+                self.gangs.remove(g)
+            cache = None
+            if decoder.dcfg.method != "vanilla":
+                cache = self.pool.acquire(new_b, T)
+            state = decoder.merge_rows(parts, cache=cache)
         self.gangs.append(Gang(decoder, state, reqs))
         self.merges += 1
 
@@ -393,6 +443,11 @@ class BlockScheduler:
             req, state, decoder = self.paused.popleft()
             if state.cache is None and decoder.dcfg.method != "vanilla":
                 state.cache = self.pool.acquire(state.batch, state.total_len)
+                if decoder.dcfg.prefix_cache:
+                    # a parked state dropped its prompt KV; re-prime it
+                    # (its own chunks are usually still in the store,
+                    # so this is O(tail), not O(prompt))
+                    decoder.prime_prompt_kv(state)
             if req.admit_time < 0:   # resume keeps the first admission
                 req.admit_time = time.perf_counter()
             self.gangs.append(Gang(decoder, state, [req]))
@@ -403,7 +458,7 @@ class BlockScheduler:
         # large backlog is exactly the continuous-batching regime)
         groups: Dict[tuple, List[ServeRequest]] = {}
         for r in self.waiting:
-            groups.setdefault(r.bucket, []).append(r)
+            groups.setdefault(self._group_key(r), []).append(r)
         admitted_ids = set()
         while free > 0:
             # Largest shape group first (mirrors the synchronous
@@ -438,6 +493,18 @@ class BlockScheduler:
             self.waiting = deque(r for r in self.waiting
                                  if id(r) not in admitted_ids)
 
+    def _group_key(self, r: ServeRequest) -> tuple:
+        """Admission group: shape bucket, plus — with the prefix cache
+        on — the *current* cached-hit depth in chunks, so gangs form
+        hit-homogeneous (a gang's prefill computes from the minimum hit
+        across its rows; mixing a cold row into a warm gang would make
+        every row pay the cold row's prompt). Re-queried here rather
+        than frozen at submit: the cache warms while requests queue."""
+        if self.prefix_cache is None:
+            return r.bucket
+        hit = self.prefix_cache.match_len(r.prompt_tokens)
+        return r.bucket + (hit // self.dcfg.cache_chunk,)
+
     def _gang_target(self, group_len: int, free: int,
                      decoder: DiffusionDecoder):
         """Pick (rows to admit, padded gang batch) for one shape group.
@@ -462,7 +529,7 @@ class BlockScheduler:
 
     def _form_gang(self, decoder: DiffusionDecoder, bucket, batch_reqs,
                    padded: int) -> Gang:
-        P, gen_len = bucket
+        P, gen_len = bucket[:2]   # group key may carry a hit suffix
         n = len(batch_reqs)
         prompts = np.stack(
             [r.prompt_tokens for r in batch_reqs]
@@ -472,8 +539,10 @@ class BlockScheduler:
             cache = self.pool.acquire(padded, P + gen_len)
         state = decoder.prefill(prompts, cache=cache)
         now = time.perf_counter()
-        for r in batch_reqs:
+        for i, r in enumerate(batch_reqs):
             r.admit_time = now
+            if state.prefix_hit_tokens is not None:
+                r.cache_hit_tokens = int(state.prefix_hit_tokens[i])
         rows: List[Optional[ServeRequest]] = \
             list(batch_reqs) + [None] * (padded - n)
         return Gang(decoder, state, rows)
@@ -503,7 +572,9 @@ class BlockScheduler:
             queue_s=admit - req.submit_time,
             n_tokens=n_tok, n_blocks=req.blocks_decoded,
             max_tokens=req.max_tokens, cancelled=cancelled,
-            host_syncs=req.host_syncs, logit_syncs=req.logit_syncs)
+            host_syncs=req.host_syncs, logit_syncs=req.logit_syncs,
+            cache_hit_tokens=req.cache_hit_tokens,
+            expected_hit_tokens=req.expected_hit_tokens)
 
     def _harvest(self, gang: Gang, dnfe: int, dsync: int = 0,
                  dlogit: int = 0):
@@ -583,7 +654,11 @@ class BlockScheduler:
                     rows = open_rows + [open_rows[0]] * \
                         (new_b - len(open_rows))
                     cache = None
-                    if gang.decoder.dcfg.method != "vanilla":
+                    if gang.decoder.dcfg.method != "vanilla" \
+                            and not gang.decoder.cache_carries_state:
+                        # a state-carrying cache (prefix_cache prompt
+                        # region) is gathered by take_rows itself; a
+                        # pooled buffer would be dead weight
                         cache = self.pool.acquire(new_b, T)
                     new_state = gang.decoder.take_rows(st, rows, cache=cache)
                     if st.cache is not None:

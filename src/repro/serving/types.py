@@ -28,6 +28,10 @@ class ServeRequest:
     eos_seen: bool = False             # a streamed chunk contained EOS
     host_syncs: int = 0                # device->host sync points attributed
     logit_syncs: int = 0               # ... of which full-logit copies
+    expected_hit_tokens: int = 0       # prefix-cache match at submit time
+    cache_hit_tokens: int = 0          # prompt tokens whose prefill KV was
+                                       # assembled from the cross-request
+                                       # prefix cache (0 = cold)
 
     @property
     def bucket(self):
@@ -70,6 +74,9 @@ class Completion:
     cancelled: bool = False            # partial result: freed early
     host_syncs: int = 0                # host sync points while live
     logit_syncs: int = 0               # (B, K, V) logit copies while live
+    cache_hit_tokens: int = 0          # prefix-cache tokens reused at
+                                       # prefill (repro.cache)
+    expected_hit_tokens: int = 0       # router/admission-time estimate
 
     @property
     def tokens_per_s(self) -> float:

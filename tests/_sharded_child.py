@@ -87,6 +87,32 @@ def main():
             for i in range(n_req))),
         "pool_placement": list(eng.pool.placement),
     }
+    # prefix-cache under a data=2 mesh: cached (warm store) vs cold
+    # prefill must be bit-identical with executor placement in the
+    # loop — the KV slices round-trip through host staging and the
+    # sharded gang buffers (store placement-bound to the mesh)
+    from repro.cache import PrefixKVCache
+    dpc = DecodeConfig(method="streaming", gen_len=16, block_size=8,
+                       window=8, prefix_cache=True, cache_chunk=5)
+    store = PrefixKVCache(chunk_tokens=5, placement=ex2.placement)
+    cold = DiffusionDecoder(cfg, None, dpc, executor=ex2,
+                            prompt_cache=store).generate(prompts.copy())
+    warm = DiffusionDecoder(cfg, None, dpc, executor=ex2,
+                            prompt_cache=store).generate(prompts.copy())
+    eng_pc = ContinuousEngine(cfg, params, dpc, max_slots=8, tokenizer=tok,
+                              executor=ex2, prefix_cache=store)
+    uids_pc = [eng_pc.submit(prompts[i], max_tokens=16) for i in range(4)]
+    comps_pc = {c.uid: c for c in eng_pc.run_to_completion()}
+    out["prefix_cache"] = {
+        "exact": bool((cold.tokens == warm.tokens).all()),
+        "hit_tokens": store.stats()["lookup_hit_tokens"],
+        "store_placement": list(store.placement),
+        "engine_exact": bool(all(
+            (comps_pc[uids_pc[i]].tokens == cold.tokens[i][:16]).all()
+            for i in range(4))),
+        "engine_hits": [comps_pc[uids_pc[i]].cache_hit_tokens
+                        for i in range(4)],
+    }
     json.dump(out, sys.stdout)
     sys.stdout.write("\n")
 

@@ -263,6 +263,57 @@ def test_healthz_and_metrics():
     _run(main())
 
 
+def test_keepalive_serves_many_requests_per_socket():
+    """HTTP/1.1 keep-alive: a ClientSession issues several completions
+    (and a /metrics scrape) over ONE TCP connection, each response
+    matches the per-connection path bit for bit, and an explicit
+    Connection: close still closes."""
+    ref = _reference(PROMPT, 13, 16)
+    ref_b = _reference(PROMPT_B, 13, 16)
+
+    async def main():
+        async with _server() as (fe, eng):
+            sess = C.ClientSession(fe.host, fe.port)
+            for expect in (ref, ref_b, ref):
+                status, headers, doc = await sess.complete(
+                    {"prompt": PROMPT if expect is not ref_b else PROMPT_B,
+                     "max_tokens": 13})
+                assert status == 200
+                assert headers["connection"] == "keep-alive"
+                assert doc["text"] == expect.text
+            status, _, body = await sess.request("GET", "/metrics")
+            assert status == 200
+            assert b"repro_requests_total" in body
+            assert sess.connects == 1, "all exchanges must share a socket"
+            assert sess.requests == 4
+            await sess.close()
+            # legacy one-shot path still gets Connection: close
+            status, headers, _ = await C.complete(
+                fe.host, fe.port, {"prompt": PROMPT, "max_tokens": 13})
+            assert status == 200
+            assert headers["connection"] == "close"
+    _run(main())
+
+
+def test_keepalive_session_survives_server_side_close():
+    """A stale keep-alive socket (server idle-timeout closed it) must
+    reconnect transparently on the next request."""
+    async def main():
+        async with _server() as (fe, eng):
+            fe.request_timeout_s = 0.2        # aggressive idle timeout
+            sess = C.ClientSession(fe.host, fe.port)
+            st, _, doc = await sess.complete(
+                {"prompt": PROMPT, "max_tokens": 8})
+            assert st == 200
+            await asyncio.sleep(0.6)          # server times the socket out
+            st, _, doc = await sess.complete(
+                {"prompt": PROMPT, "max_tokens": 8})
+            assert st == 200
+            assert sess.connects == 2         # exactly one reconnect
+            await sess.close()
+    _run(main())
+
+
 # ------------------------------------------------------------ validation
 
 

@@ -80,6 +80,21 @@ def test_divisibility_fallback_replicates_exactly():
     assert fb["exact"], "replicated fallback must stay bit-identical"
 
 
+def test_prefix_cache_exact_on_data_sharded_mesh():
+    """Cached vs cold prefill is bit-identical under DecodeExecutor
+    placement (data=2): chunk KV slices round-trip host staging and
+    the sharded gang buffers without drift, the store is placement-
+    bound, and the sharded ContinuousEngine path reuses chunks the
+    direct decoders inserted (prompt KV is method/gen-len agnostic)."""
+    pc = _report()["prefix_cache"]
+    assert pc["exact"], "warm prefill must equal cold on the mesh"
+    assert pc["hit_tokens"] > 0, "second run must hit the store"
+    assert pc["store_placement"] != ["host"]
+    assert pc["engine_exact"]
+    assert all(h > 0 for h in pc["engine_hits"]), \
+        "engine rows must reuse the chunks the direct runs inserted"
+
+
 def test_sharded_engine_end_to_end():
     eng = _report()["engine"]
     assert eng["batch_multiple"] == 2
