@@ -42,8 +42,13 @@ from repro.core.decoder import METHODS, DecodeConfig, DiffusionDecoder
 from repro.serving import ContinuousEngine, ServeMetrics
 
 
-def run_engine(cfg, params, dcfg, work, max_slots):
+def run_engine(cfg, params, dcfg, work, max_slots, tracer=None):
+    """Timed engine run (post-warmup). ``tracer`` attaches the full
+    repro.obs span pipeline — bench_obs uses the tracer-on/off delta
+    as the observability overhead measurement."""
     eng = ContinuousEngine(cfg, params, dcfg, max_slots=max_slots)
+    if tracer is not None:
+        eng.set_tracer(tracer, "engine-0")
     for p, mt in work:                  # warmup wave: compile everything
         eng.submit(p, max_tokens=mt)
     eng.run_to_completion()
@@ -51,7 +56,9 @@ def run_engine(cfg, params, dcfg, work, max_slots):
     jit_after_warmup = eng.jit_cache_size()
     t0 = time.perf_counter()
     for p, mt in work:
-        eng.submit(p, max_tokens=mt)
+        eng.submit(p, max_tokens=mt,
+                   trace_id=tracer.new_trace_id()
+                   if tracer is not None else "")
     done = eng.run_to_completion()
     wall = time.perf_counter() - t0
     snap = eng.metrics.snapshot()

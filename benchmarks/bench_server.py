@@ -50,14 +50,15 @@ BLOCK = 8
 
 
 def build_frontend(max_slots: int, max_pending: int,
-                   prefix_cache: bool = False):
+                   prefix_cache: bool = False, tracer=None):
     cfg, params = ragged_model()
     d = DecodeConfig(method="streaming", gen_len=GEN_LEN, block_size=BLOCK,
                      window=8, prefix_cache=prefix_cache, cache_chunk=16)
     eng = ContinuousEngine(cfg, params, d, max_slots=max_slots,
                            tokenizer=ByteTokenizer(cfg.vocab_size))
     return HttpFrontend(EngineLoop(eng, max_pending=max_pending,
-                                   idle_poll_s=0.002), port=0), eng
+                                   idle_poll_s=0.002, tracer=tracer),
+                        port=0, tracer=tracer), eng
 
 
 async def stream_once(host, port, prompt, max_tokens):

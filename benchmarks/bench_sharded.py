@@ -94,8 +94,35 @@ async def _closed_loop(host, port, clients, per_client, max_tokens):
     return lat, wall
 
 
+def _trace_imbalance(tracer, n_engines):
+    """Attribute per-engine time from the recorded trace: decode-busy
+    seconds (``decode_block`` X spans on each engine's track) vs
+    request queue-wait seconds (async ``queue`` spans, attributed to
+    the engine that admitted the request). Engine pids are 1..N in
+    EngineLoop construction order."""
+    evs = tracer.events()
+    busy = [0.0] * n_engines
+    queued = [0.0] * n_engines
+    for e in evs:
+        if e.get("ph") == "X" and e.get("name") == "decode_block" \
+                and 1 <= e["pid"] <= n_engines:
+            busy[e["pid"] - 1] += e["dur"] / 1e6
+    opens = {}
+    for e in sorted((e for e in evs if e.get("cat") == "request"
+                     and e.get("name") == "queue"),
+                    key=lambda e: e["ts"]):
+        if e["ph"] == "b":
+            opens[e["id"]] = e
+        elif e["ph"] == "e" and e["id"] in opens:
+            b = opens.pop(e["id"])
+            if 1 <= b["pid"] <= n_engines:
+                queued[b["pid"] - 1] += (e["ts"] - b["ts"]) / 1e6
+    return {"decode_busy_s": [round(v, 3) for v in busy],
+            "queue_wait_s": [round(v, 3) for v in queued]}
+
+
 def bench_engine_scaling(cfg, params, dcfg, engine_counts, clients,
-                         per_client, max_tokens):
+                         per_client, max_tokens, trace_dir=None):
     from repro.data.tokenizer import ByteTokenizer
     from repro.launch.mesh import make_submeshes
     from repro.serving import ContinuousEngine, DecodeExecutor, percentile
@@ -104,16 +131,21 @@ def bench_engine_scaling(cfg, params, dcfg, engine_counts, clients,
     tok = ByteTokenizer(cfg.vocab_size)
     out = []
     for n in engine_counts:
+        tracer = None
+        if trace_dir:
+            from repro.obs.trace import Tracer
+            tracer = Tracer()
         meshes = make_submeshes(n, 1, 1)
         engines = [ContinuousEngine(
             cfg, params, dcfg, max_slots=4, tokenizer=tok,
             executor=DecodeExecutor(cfg, params, m)) for m in meshes]
-        loops = [EngineLoop(e, max_pending=64, idle_poll_s=0.002)
-                 for e in engines]
+        loops = [EngineLoop(e, max_pending=64, idle_poll_s=0.002,
+                            tracer=tracer, index=i)
+                 for i, e in enumerate(engines)]
         front = loops[0] if n == 1 else EngineRouter(loops)
 
-        async def run(front=front, engines=engines, n=n):
-            fe = await HttpFrontend(front, port=0).start()
+        async def run(front=front, engines=engines, n=n, tracer=tracer):
+            fe = await HttpFrontend(front, port=0, tracer=tracer).start()
             try:
                 lat, wall = await _closed_loop(
                     fe.host, fe.port, clients, per_client, max_tokens)
@@ -128,13 +160,21 @@ def bench_engine_scaling(cfg, params, dcfg, engine_counts, clients,
                             1e3 * percentile(lat, 99), 1),
                         "per_engine_requests": served}
             finally:
-                await fe.shutdown(drain=False, timeout_s=30)
+                await fe.shutdown(drain=True, timeout_s=30)
 
         rec = asyncio.run(run())
+        if tracer is not None:
+            rec["per_engine_time"] = _trace_imbalance(tracer, n)
+            path = os.path.join(trace_dir, f"trace_engines{n}.json")
+            tracer.export(path)
+            rec["trace_path"] = path
         print(f"  engines={n}: {rec['tok_per_s']} tok/s "
               f"p50={rec['latency_p50_ms']}ms "
               f"p99={rec['latency_p99_ms']}ms "
-              f"split={rec['per_engine_requests']}")
+              f"split={rec['per_engine_requests']}"
+              + (f" busy={rec['per_engine_time']['decode_busy_s']}"
+                 f" queued={rec['per_engine_time']['queue_wait_s']}"
+                 if tracer is not None else ""))
         out.append(rec)
     return out
 
@@ -144,6 +184,10 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer shard counts and requests")
     ap.add_argument("--out", default="results/BENCH_sharded.json")
+    ap.add_argument("--trace-dir", default="",
+                    help="record repro.obs traces per engine count and "
+                         "report decode-busy vs queue-wait seconds per "
+                         "engine (Chrome JSON written here)")
     args = ap.parse_args()
 
     import jax
@@ -167,7 +211,8 @@ def main():
                                   reps=1 if args.quick else 3)
     print("== engine loops behind one front end ==")
     engines = bench_engine_scaling(cfg, params, dcfg, engine_counts,
-                                   clients, per_client, max_tokens=16)
+                                   clients, per_client, max_tokens=16,
+                                   trace_dir=args.trace_dir or None)
 
     doc = {"arch": cfg.name, "method": dcfg.method,
            "n_devices": len(jax.devices()),

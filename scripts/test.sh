@@ -11,8 +11,11 @@
 #                                # 8-device host mesh) + sharded bench
 #   scripts/test.sh cache        # cross-request prefix cache suite +
 #                                # a quick bench_cache run
-#   scripts/test.sh lint         # compileall + import-cycle smoke
-#                                # (also runs at the top of tier-1)
+#   scripts/test.sh obs          # observability suite (tracer, span
+#                                # trees, telemetry, histograms, logs)
+#   scripts/test.sh lint         # compileall + import-cycle smoke +
+#                                # no-print policy (also runs at the
+#                                # top of tier-1)
 #   scripts/test.sh all          # suite + smoke
 #
 # Tests run on the single real CPU device; the dry-run subprocesses set
@@ -38,6 +41,28 @@ mods = [m.name for m in pkgutil.walk_packages(repro.__path__, "repro.")
 for name in sorted(mods):
     importlib.import_module(name)
 print(f"lint: imported {len(mods)} repro modules, no cycles")
+EOF
+    python - <<'EOF'
+# library code must log via repro.obs.log, not print: an embedded
+# engine should never write to a server's stdout. AST-based (docstring
+# examples showing print() are fine); the launch CLIs are the
+# allowlisted user-facing surface.
+import ast, pathlib, sys
+bad = []
+for path in sorted(pathlib.Path("src/repro").rglob("*.py")):
+    if "launch" in path.parts:
+        continue
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "print"):
+            bad.append(f"{path}:{node.lineno}")
+if bad:
+    print("lint: bare print() in library code (use repro.obs.log):")
+    print("\n".join(f"  {b}" for b in bad))
+    sys.exit(1)
+print("lint: no bare print() outside src/repro/launch")
 EOF
 }
 
@@ -76,6 +101,15 @@ run_kernels() {
         --train-steps 120 --max-slots 4 --use-kernels
 }
 
+run_obs() {
+    # observability suite, then the tracer-overhead bench (asserts
+    # tracer-on decode throughput within 5% and host_syncs_per_block
+    # unchanged; the full run writes results/BENCH_obs.json)
+    python -m pytest -x -q tests/test_obs.py
+    echo "== bench_obs --quick =="
+    python benchmarks/bench_obs.py --quick --out results/BENCH_obs_quick.json
+}
+
 run_server() {
     # loopback HTTP/SSE tests; also part of the tier-1 suite (the file
     # lives in tests/, so the plain pytest run picks it up too)
@@ -101,6 +135,7 @@ case "${1:-suite}" in
     server)  run_server ;;
     sharded) run_sharded ;;
     cache)   run_cache ;;
+    obs)     run_obs ;;
     lint)    run_lint ;;
     all)     run_suite; run_smoke ;;
     suite)   run_suite ;;

@@ -52,6 +52,7 @@ from repro.core.suffix import suffix_query_region
 from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 from repro.models.model import apply_model, cache_take_rows, init_cache
+from repro.obs.telemetry import CONF_BUCKETS, BlockStats
 
 METHODS = ("vanilla", "dkv", "prefix", "fast", "streaming")
 
@@ -159,6 +160,12 @@ class DecodeState:
     logit_syncs: int = 0              # of those, full (B, K, V) logit copies
     prefill_time: float = 0.0
     decode_time: float = 0.0
+    # per-block dynamics (repro.obs.telemetry.BlockStats): appended by
+    # every decode_block call — harvested from the SAME host sync that
+    # returns the block's tokens, so telemetry never adds a sync. The
+    # serving scheduler drains this list after each call; standalone
+    # decoder users read it off the finished state.
+    block_stats: list = dataclasses.field(default_factory=list)
 
     @property
     def batch(self) -> int:
@@ -791,13 +798,31 @@ class DiffusionDecoder:
             x = x.at[:, bstart:bstart + K].set(new_blk)
             committed = committed.at[:, bstart:bstart + K].set(
                 blk_committed | commit)
-            return x, committed
+            return x, committed, commit
 
         def f(p, x, committed, done, cache, qpos_b, valid_mask, cached_mask,
               *, bstart, pstart):
             B, T = x.shape
             prefix_len = bstart
             vsums = jnp.zeros((steps_cap,), jnp.int32)  # dkv kv-size trace
+            # telemetry carries (repro.obs): commits per device step and
+            # a confidence histogram of committed tokens — scatter-adds
+            # inside the compiled loop, harvested with the block's other
+            # outputs, so they cost zero extra host syncs. Only rows
+            # live at block start count (done rows' lanes are padding).
+            counts = jnp.zeros((steps_cap,), jnp.int32)
+            hist = jnp.zeros((CONF_BUCKETS,), jnp.int32)
+            live = ~done[:, None]
+
+            def tally(counts, hist, step, commit, conf):
+                act = commit & live
+                counts = counts.at[step].add(
+                    jnp.sum(act.astype(jnp.int32)))
+                b_idx = jnp.clip((conf * CONF_BUCKETS).astype(jnp.int32),
+                                 0, CONF_BUCKETS - 1)
+                hist = hist.at[b_idx.ravel()].add(
+                    act.ravel().astype(jnp.int32))
+                return counts, hist
 
             def loop_open(committed, step):
                 blk_masked = ~committed[:, bstart:bstart + K]
@@ -808,23 +833,24 @@ class DiffusionDecoder:
                 pos_T = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
 
                 def cond(c):
-                    _, committed, step, _ = c
+                    committed, step = c[1], c[2]
                     return loop_open(committed, step)
 
                 def body(c):
-                    x, committed, step, _ = c
+                    x, committed, step, _, counts, hist = c
                     out = apply_model(cfg, p, tokens=x, positions=pos_T,
                                       use_kernels=uk)
                     conf, toks = self._conf_from_logits(
                         out.logits[:, bstart:bstart + K])
-                    x, committed = commit_tokens(x, committed, conf, toks,
-                                                 bstart)
-                    return (x, committed, step + 1, toks)
+                    x, committed, commit = commit_tokens(
+                        x, committed, conf, toks, bstart)
+                    counts, hist = tally(counts, hist, step, commit, conf)
+                    return (x, committed, step + 1, toks, counts, hist)
 
                 init = (x, committed, jnp.int32(0),
-                        jnp.zeros((B, K), jnp.int32))
-                x, committed, steps, toks = jax.lax.while_loop(
-                    cond, body, init)
+                        jnp.zeros((B, K), jnp.int32), counts, hist)
+                x, committed, steps, toks, counts, hist = \
+                    jax.lax.while_loop(cond, body, init)
 
             elif d.method == "dkv":
                 def cond(c):
@@ -833,7 +859,7 @@ class DiffusionDecoder:
 
                 def body(c):
                     x, committed, step, _, cache, valid_mask, cached_mask, \
-                        vsums = c
+                        vsums, counts, hist = c
                     q_toks = jnp.take_along_axis(x, qpos_b, axis=1)
                     mix = jnp.take_along_axis(cached_mask, qpos_b, axis=1)
                     out = apply_model(cfg, p, tokens=q_toks,
@@ -849,16 +875,17 @@ class DiffusionDecoder:
                     valid_mask = valid_mask | newly
                     vsums = vsums.at[step].set(
                         jnp.sum(valid_mask.astype(jnp.int32)) // B)
-                    x, committed = commit_tokens(x, committed, conf, toks,
-                                                 bstart)
+                    x, committed, commit = commit_tokens(
+                        x, committed, conf, toks, bstart)
+                    counts, hist = tally(counts, hist, step, commit, conf)
                     return (x, committed, step + 1, toks, out.cache,
-                            valid_mask, cached_mask, vsums)
+                            valid_mask, cached_mask, vsums, counts, hist)
 
                 init = (x, committed, jnp.int32(0),
                         jnp.zeros((B, K), jnp.int32), cache,
-                        valid_mask, cached_mask, vsums)
+                        valid_mask, cached_mask, vsums, counts, hist)
                 (x, committed, steps, toks, cache, valid_mask, cached_mask,
-                 vsums) = jax.lax.while_loop(cond, body, init)
+                 vsums, counts, hist) = jax.lax.while_loop(cond, body, init)
 
             else:
                 # prefix / fast / streaming: block-start refresh (paper
@@ -906,8 +933,9 @@ class DiffusionDecoder:
                     conf, toks = self._conf_from_hidden(p, blk_out)
                 else:
                     conf, toks = self._conf_from_logits(blk_out)
-                x, committed = commit_tokens(x, committed, conf, toks,
-                                             bstart)
+                x, committed, commit = commit_tokens(x, committed, conf,
+                                                     toks, bstart)
+                counts, hist = tally(counts, hist, 0, commit, conf)
 
                 if frozen:
                     bpos = jnp.broadcast_to(
@@ -915,11 +943,11 @@ class DiffusionDecoder:
                                    dtype=jnp.int32)[None], (B, K))
 
                 def cond(c):
-                    _, committed, step, _ = c
+                    committed, step = c[1], c[2]
                     return loop_open(committed, step)
 
                 def body(c):
-                    x, committed, step, _ = c
+                    x, committed, step, _, counts, hist = c
                     if frozen:
                         out = apply_model(cfg, p,
                                           tokens=x[:, bstart:bstart + K],
@@ -943,13 +971,14 @@ class DiffusionDecoder:
                     else:
                         conf, toks = self._conf_from_logits(
                             out.logits[:, :K])
-                    x, committed = commit_tokens(x, committed, conf, toks,
-                                                 bstart)
-                    return (x, committed, step + 1, toks)
+                    x, committed, commit = commit_tokens(
+                        x, committed, conf, toks, bstart)
+                    counts, hist = tally(counts, hist, step, commit, conf)
+                    return (x, committed, step + 1, toks, counts, hist)
 
-                init = (x, committed, jnp.int32(1), toks)
-                x, committed, steps, toks = jax.lax.while_loop(
-                    cond, body, init)
+                init = (x, committed, jnp.int32(1), toks, counts, hist)
+                x, committed, steps, toks, counts, hist = \
+                    jax.lax.while_loop(cond, body, init)
 
             # straggler finalize (steps cap reached): commit the last
             # step's argmax — but never overwrite rows that early-exited
@@ -957,6 +986,7 @@ class DiffusionDecoder:
             blk = x[:, bstart:bstart + K]
             blk_masked = ~committed[:, bstart:bstart + K]
             fill = blk_masked & ~done[:, None] & (steps > 0)
+            fill_n = jnp.sum(fill.astype(jnp.int32))
             blk = jnp.where(fill, toks, blk)
             x = x.at[:, bstart:bstart + K].set(blk)
             committed = committed.at[:, bstart:bstart + K].set(True)
@@ -969,7 +999,7 @@ class DiffusionDecoder:
             else:
                 n_hit = jnp.int32(0)
             return (x, committed, done, steps, n_hit, cache,
-                    valid_mask, cached_mask, vsums)
+                    valid_mask, cached_mask, vsums, counts, hist, fill_n)
 
         # The fused fn consumes and rewrites the whole cache for every
         # cached method, so its input buffer is dead on entry — donate
@@ -998,12 +1028,13 @@ class DiffusionDecoder:
         bstart = region.block_start
         prefix_len = bstart
 
+        live_rows = int((~state.done).sum())
         vm = None if state.valid_mask is None \
             else self._put_batch(state.valid_mask)
         cm = None if state.cached_mask is None \
             else self._put_batch(state.cached_mask)
         (x, committed, done, steps, n_hit, cache, vm, cm,
-         vsums) = self._fused_fn()(
+         vsums, counts, hist, fill_n) = self._fused_fn()(
             self.params, self._put_batch(state.x),
             self._put_batch(state.committed), self._put_batch(state.done),
             state.cache, self._put_batch(qpos_b),
@@ -1011,12 +1042,17 @@ class DiffusionDecoder:
             pstart=P if d.prefix_cache else 0)
 
         # the ONE host sync for this block (np.array: writable copies —
-        # the scheduler and finalize mutate these buffers in place)
+        # the scheduler and finalize mutate these buffers in place).
+        # The telemetry outputs (counts/hist/fill_n) materialize with
+        # the rest of this call's results — no extra sync.
         state.x = np.array(x)
         state.committed = np.array(committed)
         state.done = np.array(done)
         steps = int(steps)
-        state.early_exits += int(n_hit)
+        n_hit = int(n_hit)
+        counts = np.asarray(counts)
+        hist = np.asarray(hist)
+        state.early_exits += n_hit
         state.host_syncs += 1
         state.cache = cache
         if vm is not None:
@@ -1045,7 +1081,15 @@ class DiffusionDecoder:
                 state.q_tokens += (steps - 1) * B * Sq
                 state.kv_tokens += (steps - 1) * B * Sq * (prefix_len + Sq)
         state.block_idx = region.block_idx + 1
-        state.decode_time += time.perf_counter() - t_block
+        wall = time.perf_counter() - t_block
+        state.block_stats.append(BlockStats(
+            method=d.method, block_idx=region.block_idx, batch=B,
+            live_rows=live_rows, steps=steps, steps_cap=steps_cap,
+            committed_per_step=[int(v) for v in counts[:steps]],
+            straggler_fill=int(fill_n),
+            conf_hist=[int(v) for v in hist],
+            window=Sq, early_exits=n_hit, wall_s=wall))
+        state.decode_time += wall
         return state
 
     # --------------------------------------------------- legacy host loop
@@ -1078,6 +1122,11 @@ class DiffusionDecoder:
         prefix_len = bstart
         step = 0
         toks = None
+        # telemetry mirror of the fused loop's device-side tally
+        live = ~done[:, None]
+        live_rows = int((~done).sum())
+        committed_per_step: list = []
+        conf_hist = np.zeros((CONF_BUCKETS,), np.int64)
         while step < steps_cap:
             blk_masked = ~committed[:, bstart:bend]
             if not (blk_masked & ~done[:, None]).any():
@@ -1225,21 +1274,29 @@ class DiffusionDecoder:
             sel = np.where(commit)
             x[sel[0], bstart + sel[1]] = toks[sel]
             committed[:, bstart:bend] |= commit
+            act = commit & live
+            committed_per_step.append(int(act.sum()))
+            b_idx = np.clip((conf * CONF_BUCKETS).astype(np.int32),
+                            0, CONF_BUCKETS - 1)
+            np.add.at(conf_hist, b_idx[act], 1)
 
         state.steps_per_block.append(step)
 
         # finalize block: commit any stragglers (steps cap reached) —
         # rows that early-exited in a prior block keep their tail
         blk_masked = ~committed[:, bstart:bend] & ~done[:, None]
+        straggler_fill = int(blk_masked.sum()) if step > 0 else 0
         if blk_masked.any() and toks is not None:
             x[:, bstart:bend] = np.where(blk_masked, toks, x[:, bstart:bend])
         committed[:, bstart:bend] = True
         # Early exit (paper S3.3): a block that decoded an EOS makes
         # all *subsequent* blocks skippable for that row.
+        hits_blk = 0
         if d.early_exit:
             hit = (x[:, bstart:bend] == eos_id).any(axis=1) & ~done
-            if hit.any():
-                state.early_exits += int(hit.sum())
+            hits_blk = int(hit.sum())
+            if hits_blk:
+                state.early_exits += hits_blk
                 done |= hit
 
         state.cache = cache
@@ -1249,7 +1306,15 @@ class DiffusionDecoder:
         state.nfe += nfe
         state.q_tokens += q_tokens
         state.kv_tokens += kv_tokens
-        state.decode_time += time.perf_counter() - t_block
+        wall = time.perf_counter() - t_block
+        state.block_stats.append(BlockStats(
+            method=d.method, block_idx=c, batch=B, live_rows=live_rows,
+            steps=step, steps_cap=steps_cap,
+            committed_per_step=committed_per_step,
+            straggler_fill=straggler_fill,
+            conf_hist=[int(v) for v in conf_hist],
+            window=Sq, early_exits=hits_blk, wall_s=wall))
+        state.decode_time += wall
         return state
 
     # ------------------------------------------------------ main loop

@@ -88,7 +88,22 @@ def main():
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="fake this many host devices via XLA_FLAGS "
                          "(CI/demo; must be >= engines * data * model)")
+    ap.add_argument("--trace-dir", default="", metavar="DIR",
+                    help="record request span trees + decode timelines "
+                         "and write Chrome-trace JSON (Perfetto-"
+                         "loadable) into DIR on shutdown (HTTP mode)")
+    ap.add_argument("--profile-blocks", type=int, default=0, metavar="N",
+                    help="capture a jax.profiler trace over the first "
+                         "N decoded blocks (written under --trace-dir, "
+                         "or results/profile)")
+    ap.add_argument("--log-level", default="info",
+                    choices=["debug", "info", "warning", "error"])
+    ap.add_argument("--log-json", action="store_true",
+                    help="JSON-lines log records instead of text")
     args = ap.parse_args()
+
+    from repro.obs.log import setup_logging
+    setup_logging(level=args.log_level, json_mode=args.log_json)
 
     # flag validation up front — nothing below may cost the user a
     # training run or N param placements before a SystemExit
@@ -169,19 +184,48 @@ def main():
                                 tokenizer=tok, executor=ex,
                                 prefix_cache=store)
 
+    tracer = None
+    if args.trace_dir:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+
+    def attach_profiler(engine):
+        if args.profile_blocks > 0:
+            # jax.profiler traces are process-global: exactly one
+            # engine may own the capture window
+            from repro.obs.profiler import BlockProfiler
+            engine.profiler = BlockProfiler(
+                args.trace_dir or "results/profile", args.profile_blocks)
+
+    def export_trace():
+        if tracer is not None:
+            path = os.path.join(args.trace_dir, "trace.json")
+            tracer.export(path)
+            print(f"chrome trace written to {path} "
+                  f"(open in ui.perfetto.dev)")
+
     if args.http:
         from repro.server import run as run_http
         engines = [make_engine(ex) for ex in executors]
-        run_http(engines if len(engines) > 1 else engines[0],
-                 host=args.http_host, port=args.http,
-                 max_pending=args.max_pending)
+        attach_profiler(engines[0])
+        try:
+            run_http(engines if len(engines) > 1 else engines[0],
+                     host=args.http_host, port=args.http,
+                     max_pending=args.max_pending, tracer=tracer)
+        finally:
+            export_trace()
         return
     ds = ArithmeticDataset(tok, seq_len=44)
     samples = ds.eval_set(args.n)
     if args.mode == "continuous":
         eng = make_engine(executors[0])
+        if tracer is not None:
+            eng.set_tracer(tracer, "engine-0")
+        attach_profiler(eng)
         for s in samples:
-            eng.submit(s.prompt, max_tokens=args.gen_len)
+            eng.submit(s.prompt, max_tokens=args.gen_len,
+                       trace_id=tracer.new_trace_id()
+                       if tracer is not None else "")
         if args.stream:
             done = []
             eng.on_chunk(None, lambda ch: print(
@@ -206,6 +250,7 @@ def main():
               f"syncs/blk={snap['host_syncs_per_block']:.2f} "
               f"steps/blk={snap['device_steps_per_block']:.2f} "
               f"jit_cache={eng.jit_cache_size()}")
+        export_trace()
         return
     eng = ServingEngine(cfg, params, d, mode="batch")
     for s in samples:

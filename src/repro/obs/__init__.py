@@ -1,0 +1,40 @@
+"""Observability subsystem: tracing, decode telemetry, histograms,
+structured logging, and profiler hooks.
+
+Layering (threaded through every serving layer):
+
+    trace      — request span trees + per-thread timelines on a
+                 lock-free-ish ring-buffer ``Tracer`` (monotonic
+                 clocks), exported as Chrome-trace JSON loadable in
+                 Perfetto: one track per engine/decode thread plus an
+                 async track per request (accept → admission → blocks
+                 → finalize), correlated by trace id.
+    telemetry  — per-block diffusion dynamics harvested from the fused
+                 decode loop in its ONE existing host sync (steps used
+                 vs the τ-schedule cap, tokens committed per step,
+                 confidence histogram, suffix-window size, early-exit/
+                 straggler flags), aggregated per (method, block index).
+    metrics    — bucketed ``Histogram`` counters for Prometheus
+                 exposition and device memory gauges.
+    log        — JSON-lines structured logger carrying uid/engine/gang
+                 fields (``--log-level`` / ``--log-json``).
+    profiler   — ``jax.profiler`` start/stop around the first N decoded
+                 blocks (``--profile-blocks N``).
+
+Everything is optional: a ``tracer=None`` (the default everywhere)
+costs one ``is None`` test per call site, and telemetry rides inside
+the already-compiled fused loop, so ``host_syncs_per_block`` is
+unchanged with observability on.
+"""
+from repro.obs.log import get_logger, setup_logging
+from repro.obs.metrics import Histogram, device_memory_stats
+from repro.obs.profiler import BlockProfiler
+from repro.obs.telemetry import (CONF_BUCKETS, BlockStats,
+                                 TelemetryAggregator)
+from repro.obs.trace import Tracer, span
+
+__all__ = [
+    "Tracer", "span", "BlockStats", "TelemetryAggregator", "CONF_BUCKETS",
+    "Histogram", "device_memory_stats", "BlockProfiler",
+    "get_logger", "setup_logging",
+]

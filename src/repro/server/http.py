@@ -27,16 +27,18 @@ from __future__ import annotations
 
 import asyncio
 import json
-import logging
 import math
+import time
 from typing import Optional
 
+from repro.obs.log import get_logger
+from repro.obs.metrics import Histogram, device_memory_stats
 from repro.server import wire
 from repro.server.loop import EngineLoop, Ticket
 from repro.server.types import (AdmissionRejected, BadRequest,
                                 ServerRequest, finish_reason)
 
-log = logging.getLogger(__name__)
+log = get_logger(__name__)
 
 
 class HttpFrontend:
@@ -46,7 +48,8 @@ class HttpFrontend:
     agnostic; only /healthz and /metrics fan in across engines."""
 
     def __init__(self, engine_loop, host: str = "127.0.0.1",
-                 port: int = 8000, request_timeout_s: float = 10.0):
+                 port: int = 8000, request_timeout_s: float = 10.0,
+                 tracer=None):
         self.loop = engine_loop                       # loop OR router
         self.engines = getattr(engine_loop, "engines",
                                None) or [engine_loop.engine]
@@ -54,6 +57,7 @@ class HttpFrontend:
         self.host = host
         self.port = port
         self.request_timeout_s = request_timeout_s   # header-read budget
+        self.tracer = tracer
         self._server: Optional[asyncio.AbstractServer] = None
         self._conns: set = set()
         self._draining = False
@@ -64,6 +68,8 @@ class HttpFrontend:
         self._server = await asyncio.start_server(
             self._client, self.host, self.port)
         self.port = self._server.sockets[0].getsockname()[1]
+        if self.tracer is not None:
+            self.tracer.name_thread("asyncio")       # pid 0 = front end
         if not self.loop.running:
             self.loop.start()
         return self
@@ -182,6 +188,7 @@ class HttpFrontend:
     async def _completions(self, req: wire.HttpRequest,
                            reader, writer, keep: bool) -> bool:
         """Returns whether the connection can serve another request."""
+        accept_ns = time.perf_counter_ns()
         if self._draining:
             writer.write(wire.error_response(
                 503, "server is draining", {"Retry-After": "5"}))
@@ -212,6 +219,13 @@ class HttpFrontend:
                 {"Retry-After": str(int(math.ceil(e.retry_after_s)))},
                 keep_alive=keep))
             return keep
+        if self.tracer is not None and ticket.trace_id:
+            # outermost span of the request tree: socket accept ->
+            # final response byte written (or disconnect drain)
+            ticket.accept_ns = accept_ns
+            self.tracer.async_begin(ticket.trace_id, "http",
+                                    t_ns=accept_ns, path=req.path,
+                                    stream=sreq.stream)
         if sreq.stream:
             await self._stream_response(ticket, events, reader, writer)
             return False       # chunked SSE ends with the connection
@@ -236,12 +250,45 @@ class HttpFrontend:
             if not data:
                 return
 
+    def _end_http(self, ticket: Ticket, **args) -> None:
+        """Close the request's outermost ("http") span."""
+        if self.tracer is not None and ticket.trace_id:
+            self.tracer.async_end(ticket.trace_id, "http", **args)
+
+    def _end_http_on_done(self, ticket: Ticket,
+                          events: asyncio.Queue, **args) -> None:
+        """Disconnect path: the client is gone but the engine keeps the
+        row until the next block boundary — the "request" span closes
+        then, from the decode thread. Park a task on the (now
+        client-less) event queue so "http" closes strictly after it and
+        the span tree stays well-formed."""
+        if self.tracer is None or not ticket.trace_id:
+            return
+
+        async def _wait():
+            try:
+                await self._await_done(events)
+            finally:
+                self._end_http(ticket, **args)
+
+        task = asyncio.get_running_loop().create_task(_wait())
+        self._conns.add(task)            # shutdown() waits for these
+        task.add_done_callback(self._conns.discard)
+
     async def _json_response(self, ticket: Ticket, events,
                              writer, keep: bool = False) -> None:
         comp = await self._await_done(events)
-        writer.write(wire.response(
-            200, self._completion_json(comp, ticket), keep_alive=keep))
-        await writer.drain()
+        headers = {"X-Repro-Trace-Id": ticket.trace_id} \
+            if ticket.trace_id else None
+        try:
+            writer.write(wire.response(
+                200, self._completion_json(comp, ticket),
+                extra_headers=headers, keep_alive=keep))
+            await writer.drain()
+        finally:
+            # the completion is in hand, so "request" already closed —
+            # end "http" even when the final write finds the peer gone
+            self._end_http(ticket, status=200)
 
     @staticmethod
     async def _await_done(events: asyncio.Queue):
@@ -252,7 +299,9 @@ class HttpFrontend:
 
     async def _stream_response(self, ticket: Ticket, events, reader,
                                writer) -> None:
-        writer.write(wire.SSE_HEADER)
+        writer.write(wire.sse_header(
+            {"X-Repro-Trace-Id": ticket.trace_id}
+            if ticket.trace_id else None))
         disconnect = asyncio.create_task(self._wait_disconnect(reader))
         nxt = None
         try:
@@ -264,6 +313,8 @@ class HttpFrontend:
                     return_when=asyncio.FIRST_COMPLETED)
                 if nxt not in done:
                     self.loop.cancel(ticket, "disconnect")
+                    self._end_http_on_done(ticket, events,
+                                           disconnect=True)
                     return
                 kind, payload = nxt.result()
                 if kind == "chunk":
@@ -277,18 +328,19 @@ class HttpFrontend:
                     writer.write(wire.sse_event(wire.SSE_DONE_SENTINEL))
                     writer.write(wire.CHUNKED_EOF)
                     await writer.drain()
+                    self._end_http(ticket, status=200)
                     return
                 await writer.drain()
         except (ConnectionResetError, BrokenPipeError):
             self.loop.cancel(ticket, "disconnect")
+            self._end_http_on_done(ticket, events, disconnect=True)
         finally:
             disconnect.cancel()
             if nxt is not None:
                 nxt.cancel()
 
-    @staticmethod
-    def _completion_json(comp, ticket: Ticket) -> dict:
-        return {
+    def _completion_json(self, comp, ticket: Ticket) -> dict:
+        doc = {
             "uid": comp.uid, "text": comp.text,
             "n_tokens": comp.n_tokens, "n_blocks": comp.n_blocks,
             "max_tokens": comp.max_tokens,
@@ -298,6 +350,17 @@ class HttpFrontend:
             "queue_s": comp.queue_s, "nfe": comp.nfe,
             "cache_hit_tokens": comp.cache_hit_tokens,
         }
+        if ticket.trace_id:
+            doc["trace_id"] = ticket.trace_id
+        if ticket.req.trace and self.tracer is not None \
+                and ticket.trace_id:
+            # opt-in span echo: everything recorded for this request so
+            # far (the "http" span itself closes after this response is
+            # written, so it is absent by construction)
+            doc["trace"] = {
+                "trace_id": ticket.trace_id,
+                "events": self.tracer.request_events(ticket.trace_id)}
+        return doc
 
     # ------------------------------------------------------ health/metrics
 
@@ -374,7 +437,7 @@ class HttpFrontend:
         emit("repro_throughput_tok_per_s", f"{tput:.6f}", "gauge",
              "Generated tokens per second of scheduler wall time.")
         for metric, key in (("repro_latency_seconds", "latency"),
-                            ("repro_ttfb_seconds", "ttfb")):
+                            ("repro_ttfb_quantile_seconds", "ttfb")):
             vals = [getattr(r, f"{key}_s")
                     for e in self.engines for r in e.metrics.requests]
             out.append(f"# HELP {metric} Request {key} quantiles "
@@ -383,6 +446,67 @@ class HttpFrontend:
             for q, pct in (("0.5", 50), ("0.99", 99)):
                 out.append(f'{metric}{{quantile="{q}"}} '
                            f"{percentile(vals, pct):.6f}")
+        # bucketed histograms (TTFB, queue wait, block wall, NFE/token):
+        # one engine emits the bare family; a fleet emits one labeled
+        # series per engine — PromQL sums across labels by ``le``, and
+        # a pre-pooled unlabeled duplicate would double-count on scrape
+        if len(self.engines) == 1:
+            for h in self.engines[0].metrics.histograms:
+                out.extend(h.prometheus())
+        else:
+            per_engine = zip(*(e.metrics.histograms
+                               for e in self.engines))
+            for series in per_engine:
+                for i, h in enumerate(series):
+                    lines = h.prometheus(f'engine="{i}"')
+                    # HELP/TYPE once per family, not once per engine
+                    out.extend(lines if i == 0 else lines[2:])
+        # per-block decode dynamics (repro.obs.telemetry) rollup
+        tel = [e.telemetry.totals() for e in self.engines]
+
+        def ttel(key):
+            return sum(t[key] for t in tel)
+
+        steps, caps = ttel("steps"), ttel("steps_cap")
+        emit("repro_decode_blocks_total", ttel("blocks"), "counter",
+             "decode_block calls across engines.")
+        emit("repro_decode_steps_total", steps, "counter",
+             "Device diffusion steps actually run.")
+        emit("repro_decode_steps_cap_total", caps, "counter",
+             "Tau-schedule maximum steps for the same blocks.")
+        emit("repro_decode_steps_saved_ratio",
+             f"{1.0 - steps / caps if caps else 0.0:.6f}", "gauge",
+             "Fraction of scheduled steps skipped by early exit.")
+        emit("repro_decode_straggler_fill_total", ttel("straggler_fill"),
+             "counter", "Tokens force-committed at schedule end.")
+        emit("repro_decode_early_exits_total", ttel("early_exits"),
+             "counter", "Rows that hit the early-exit test.")
+        conf = [0] * len(tel[0]["conf_hist"]) if tel else []
+        for t in tel:
+            for i, c in enumerate(t["conf_hist"]):
+                conf[i] += c
+        out.append("# HELP repro_decode_confidence_total Committed-token"
+                   " confidence histogram (equal buckets over [0,1]).")
+        out.append("# TYPE repro_decode_confidence_total counter")
+        for i, c in enumerate(conf):
+            lo, hi = i / len(conf), (i + 1) / len(conf)
+            out.append(f'repro_decode_confidence_total'
+                       f'{{bucket="{lo:.1f}-{hi:.1f}"}} {c}')
+        # accelerator memory (absent on CPU backends)
+        mem = device_memory_stats()
+        for key in ("bytes_in_use", "peak_bytes_in_use", "bytes_limit"):
+            rows = [(dev, st[key]) for dev, st in sorted(mem.items())
+                    if key in st]
+            if rows:
+                out.append(f"# HELP repro_device_{key} Device memory "
+                           f"({key}) as reported by the runtime.")
+                out.append(f"# TYPE repro_device_{key} gauge")
+                for dev, v in rows:
+                    out.append(f'repro_device_{key}{{device="{dev}"}} '
+                               f"{int(v)}")
+        if self.tracer is not None:
+            emit("repro_trace_dropped_total", self.tracer.dropped,
+                 "counter", "Trace events evicted from full rings.")
         if len(self.engines) > 1:
             for name, key, mtype, help_text, fmt in (
                     ("requests_total", "requests", "counter",
@@ -418,11 +542,13 @@ class HttpFrontend:
         return "\n".join(out) + "\n"
 
 
-def _front(engines, max_pending: int):
+def _front(engines, max_pending: int, tracer=None):
     """One EngineLoop per engine; >1 engine routes through
-    ``EngineRouter`` (least-loaded by live rows)."""
+    ``EngineRouter`` (least-loaded by live rows). ``tracer`` claims a
+    named track group per engine."""
     engines = engines if isinstance(engines, (list, tuple)) else [engines]
-    loops = [EngineLoop(e, max_pending=max_pending) for e in engines]
+    loops = [EngineLoop(e, max_pending=max_pending, tracer=tracer,
+                        index=i) for i, e in enumerate(engines)]
     if len(loops) == 1:
         return loops[0]
     from repro.server.router import EngineRouter
@@ -430,16 +556,16 @@ def _front(engines, max_pending: int):
 
 
 async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
-                max_pending: int = 64) -> None:
+                max_pending: int = 64, tracer=None) -> None:
     """Run the HTTP front end until cancelled, then drain gracefully.
     ``engine`` may be one ``ContinuousEngine`` or a list (one per
     device/mesh; requests are routed least-loaded)."""
-    frontend = HttpFrontend(_front(engine, max_pending),
-                            host=host, port=port)
+    frontend = HttpFrontend(_front(engine, max_pending, tracer),
+                            host=host, port=port, tracer=tracer)
     await frontend.start()
-    print(f"repro.server listening on http://{frontend.host}:"
-          f"{frontend.port}  (POST /v1/completions, GET /healthz, "
-          f"GET /metrics; engines={len(frontend.engines)})")
+    log.info("repro.server listening on http://%s:%s (POST "
+             "/v1/completions, GET /healthz, GET /metrics; engines=%d)",
+             frontend.host, frontend.port, len(frontend.engines))
     try:
         await frontend.serve_forever()
     except asyncio.CancelledError:
@@ -449,9 +575,9 @@ async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
 
 
 def run(engine, host: str = "127.0.0.1", port: int = 8000,
-        max_pending: int = 64) -> None:
+        max_pending: int = 64, tracer=None) -> None:
     """Blocking entry point used by ``repro.launch.serve --http``."""
     try:
-        asyncio.run(serve(engine, host, port, max_pending))
+        asyncio.run(serve(engine, host, port, max_pending, tracer=tracer))
     except KeyboardInterrupt:
         pass

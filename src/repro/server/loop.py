@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import heapq
 import itertools
-import logging
 import queue
 import threading
 import time
@@ -35,10 +34,11 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.log import get_logger
 from repro.serving.types import Completion
 from repro.server.types import AdmissionRejected, ServerRequest
 
-log = logging.getLogger(__name__)
+log = get_logger(__name__)
 
 Event = Tuple[str, object]
 
@@ -60,6 +60,8 @@ class Ticket:
         self.done = False
         self.cancel_reason: Optional[str] = None
         self.loop = None          # owning EngineLoop (set by EngineRouter)
+        self.trace_id = ""        # repro.obs correlation id ("" = off)
+        self.accept_ns: Optional[int] = None  # HTTP-accept timestamp
 
     def _emit(self, event: Event) -> None:
         try:
@@ -70,10 +72,14 @@ class Ticket:
 
 class EngineLoop:
     def __init__(self, engine, max_pending: int = 64,
-                 idle_poll_s: float = 0.05):
+                 idle_poll_s: float = 0.05, tracer=None, index: int = 0):
         self.engine = engine
         self.max_pending = max_pending
         self.idle_poll_s = idle_poll_s
+        self.index = index          # position in the fleet (track label)
+        self.tracer = tracer
+        if tracer is not None:
+            engine.set_tracer(tracer, f"engine-{index}")
         self._cmds: "queue.Queue" = queue.Queue()
         self._pending: List[list] = []      # heap: [-priority, seq, ticket]
         self._seq = itertools.count()
@@ -133,6 +139,8 @@ class EngineLoop:
                     retry_after_s=1.0)
             self._inflight += 1
         ticket = Ticket(req, deliver)
+        if self.tracer is not None:
+            ticket.trace_id = self.tracer.new_trace_id()
         self._cmds.put(("submit", ticket, None))
         return ticket
 
@@ -170,6 +178,8 @@ class EngineLoop:
 
     def _run(self) -> None:
         eng = self.engine
+        if self.tracer is not None:
+            self.tracer.name_thread("decode", pid=eng.obs_pid)
         while True:
             busy = bool(self._pending or self._live
                         or not eng.scheduler.idle)
@@ -237,7 +247,8 @@ class EngineLoop:
                 continue
             try:
                 ticket.uid = self.engine.submit(
-                    ticket.req.prompt, max_tokens=ticket.req.max_tokens)
+                    ticket.req.prompt, max_tokens=ticket.req.max_tokens,
+                    trace_id=ticket.trace_id)
             except RuntimeError:
                 # defensive only (the pre-check makes this unreachable
                 # on the single mutating thread): undo the spurious

@@ -29,14 +29,14 @@ away traffic the others could serve.
 """
 from __future__ import annotations
 
-import logging
 import time
 from typing import Callable, List
 
+from repro.obs.log import get_logger
 from repro.server.loop import EngineLoop, Ticket
 from repro.server.types import AdmissionRejected, ServerRequest
 
-log = logging.getLogger(__name__)
+log = get_logger(__name__)
 
 
 class EngineRouter:

@@ -53,6 +53,8 @@ class ServerRequest:
     stream: bool = False
     timeout_s: Optional[float] = None
     priority: int = 0
+    trace: bool = False         # echo the request's span events in the
+                                # completion JSON (needs a live Tracer)
 
     MAX_TOKENS_CAP = 4096
     PROMPT_CAP = 65536
@@ -85,12 +87,15 @@ class ServerRequest:
         priority = obj.get("priority", 0)
         if not isinstance(priority, int) or isinstance(priority, bool):
             raise BadRequest("'priority' must be an int")
+        trace = obj.get("trace", False)
+        if not isinstance(trace, bool):
+            raise BadRequest("'trace' must be a boolean")
         unknown = set(obj) - {"prompt", "max_tokens", "stream",
-                              "timeout_s", "priority"}
+                              "timeout_s", "priority", "trace"}
         if unknown:
             raise BadRequest(f"unknown fields: {sorted(unknown)}")
         return cls(prompt=obj["prompt"], max_tokens=mt, stream=stream,
-                   timeout_s=timeout_s, priority=priority)
+                   timeout_s=timeout_s, priority=priority, trace=trace)
 
 
 def finish_reason(comp, cancel_reason: Optional[str]) -> str:

@@ -125,11 +125,20 @@ def error_response(status: int, message: str,
                     extra_headers=extra_headers, keep_alive=keep_alive)
 
 
-SSE_HEADER = (b"HTTP/1.1 200 OK\r\n"
-              b"Content-Type: text/event-stream\r\n"
-              b"Cache-Control: no-cache\r\n"
-              b"Connection: close\r\n"
-              b"Transfer-Encoding: chunked\r\n\r\n")
+def sse_header(extra_headers: Dict[str, str] = None) -> bytes:
+    """Chunked SSE response head (``Connection: close`` — see module
+    docstring) with optional extra headers (``X-Repro-Trace-Id``)."""
+    head = ["HTTP/1.1 200 OK",
+            "Content-Type: text/event-stream",
+            "Cache-Control: no-cache",
+            "Connection: close",
+            "Transfer-Encoding: chunked"]
+    for k, v in (extra_headers or {}).items():
+        head.append(f"{k}: {v}")
+    return ("\r\n".join(head) + "\r\n\r\n").encode("latin1")
+
+
+SSE_HEADER = sse_header()
 
 SSE_DONE_SENTINEL = "[DONE]"
 

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core.decoder import DecodeConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.config import ModelConfig
+from repro.obs.telemetry import TelemetryAggregator
 from repro.serving.metrics import RequestMetrics, ServeMetrics
 from repro.serving.pool import PrefixKVPool
 from repro.serving.scheduler import BlockScheduler
@@ -35,7 +36,7 @@ class ContinuousEngine:
                  pool: Optional[PrefixKVPool] = None,
                  max_waiting: Optional[int] = None,
                  tokenizer=None, mesh=None, pad_pow2: bool = False,
-                 executor=None, prefix_cache=None):
+                 executor=None, prefix_cache=None, tracer=None):
         self.cfg = cfg
         self.dcfg = dcfg
         self.executor = executor
@@ -44,30 +45,62 @@ class ContinuousEngine:
         # mesh and must never migrate (see PrefixKVPool)
         self.pool = pool if pool is not None \
             else PrefixKVPool(cfg, executor=executor)
+        self.metrics = ServeMetrics(max_slots=max(max_slots, 1))
+        # per-(method, block index) decode dynamics — always on: the
+        # numbers ride the fused loop's existing host sync, and the
+        # aggregator add is a dict update per block
+        self.telemetry = TelemetryAggregator()
+        self.tracer = tracer
+        self.obs_pid = 0
         self.scheduler = BlockScheduler(
             cfg, params, dcfg, max_slots=max_slots, max_gang=max_gang,
             pool=self.pool, max_waiting=max_waiting, tokenizer=self.tok,
             mesh=mesh, pad_pow2=pad_pow2, executor=executor,
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache, tracer=tracer,
+            telemetry=self.telemetry,
+            block_hist=self.metrics.hist_block_wall)
+        self.metrics.max_slots = self.scheduler.max_slots
         # cross-request prefix KV store (None unless dcfg.prefix_cache;
         # the scheduler creates and owns placement binding)
         self.prefix_cache = self.scheduler.prefix_cache
         self.router = StreamRouter()
-        self.metrics = ServeMetrics(max_slots=self.scheduler.max_slots)
         self.stats = defaultdict(float)    # legacy ServingEngine keys
+        # jax.profiler window over the first N decoded blocks
+        # (repro.obs.profiler.BlockProfiler); ticked from step()
+        self.profiler = None
+        self._prof_blocks_seen = 0
+
+    def set_tracer(self, tracer, label: str) -> None:
+        """Attach (or re-attach) a tracer and claim a named track for
+        this engine — called by the owning EngineLoop/front end, which
+        knows the engine's index in the fleet."""
+        self.tracer = tracer
+        self.obs_pid = tracer.process(label)
+        self.scheduler.tracer = tracer
+        self.scheduler.pid = self.obs_pid
 
     # ------------------------------------------------------ submission
 
     def submit(self, prompt: Union[str, np.ndarray],
-               max_tokens: int = 64) -> int:
+               max_tokens: int = 64, trace_id: str = "") -> int:
         toks = self.tok.encode(prompt) if isinstance(prompt, str) \
             else np.asarray(prompt, np.int32)
         gen_len = round_up_blocks(max_tokens, self.dcfg.block_size)
+        t_ns = time.perf_counter_ns()
         try:
-            req = self.scheduler.submit(toks, gen_len, max_tokens)
+            req = self.scheduler.submit(toks, gen_len, max_tokens,
+                                        trace_id=trace_id)
         except RuntimeError:
             self.metrics.admission_rejects += 1
             raise
+        if self.tracer is not None and trace_id:
+            # "request" opens just before the scheduler's "queue" span
+            # (explicit earlier timestamp) and closes in _record — the
+            # one terminal point every path (EOS, length, cancel,
+            # deadline, disconnect) funnels through
+            self.tracer.async_begin(trace_id, "request", pid=self.obs_pid,
+                                    t_ns=t_ns, uid=req.uid,
+                                    max_tokens=max_tokens)
         return req.uid
 
     def expected_prefix_hit(self, prompt: Union[str, np.ndarray]) -> int:
@@ -129,6 +162,10 @@ class ContinuousEngine:
             self.metrics.prefix_cache_bytes = st["bytes"]
             self.metrics.prefix_cache_evictions = st["evictions"]
             self.metrics.prefix_cache_nodes = st["nodes"]
+        if self.profiler is not None:
+            blocks = self.telemetry.blocks
+            self.profiler.tick(blocks - self._prof_blocks_seen)
+            self._prof_blocks_seen = blocks
         return completions
 
     def _record(self, comp: Completion) -> None:
@@ -143,6 +180,10 @@ class ContinuousEngine:
             self.metrics.prefix_cache_hit_tokens += comp.cache_hit_tokens
         if comp.cancelled:
             self.metrics.cancelled += 1
+        if self.tracer is not None and comp.trace_id:
+            self.tracer.async_end(comp.trace_id, "request",
+                                  pid=self.obs_pid, uid=comp.uid,
+                                  cancelled=comp.cancelled)
         self.stats["requests"] += 1
         self.stats["tokens"] += comp.n_tokens
 

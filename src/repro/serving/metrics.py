@@ -1,10 +1,23 @@
-"""Serving metrics: per-request latency records and fleet aggregates."""
+"""Serving metrics: per-request latency records and fleet aggregates.
+
+Thread-safety contract: ``ServeMetrics`` is written by exactly one
+decode thread (``add_request``/``sample_tick``/counter ``+=``) and read
+by the asyncio thread serving ``/metrics`` and ``/health``
+(``snapshot``). The mutating entry points and ``snapshot`` share a
+lock, so a snapshot never sees a request list mid-append or totals that
+mix two completions; the lone-writer counter assignments
+(``queue_depth = ...`` etc.) stay bare — a torn read of a single int is
+impossible under the GIL and the lock covers every compound update."""
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List
 
 import numpy as np
+
+from repro.obs.metrics import (Histogram, LATENCY_BUCKETS_S,
+                               NFE_BUCKETS)
 
 
 def percentile(values, q: float) -> float:
@@ -55,59 +68,103 @@ class ServeMetrics:
     prefix_cache_evictions: int = 0    # chunks evicted (LRU, byte budget)
     prefix_cache_bytes: int = 0        # resident chunk KV bytes
     prefix_cache_nodes: int = 0        # resident chunks
+    # decode thread writes / asyncio metrics reader snapshots
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+    # bucketed distributions for Prometheus exposition (each histogram
+    # carries its own lock; observed on the decode thread)
+    hist_ttfb: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(
+            "repro_ttfb_seconds", "Submit to first committed block",
+            LATENCY_BUCKETS_S), repr=False, compare=False)
+    hist_queue: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(
+            "repro_queue_wait_seconds", "Submit to gang admission",
+            LATENCY_BUCKETS_S), repr=False, compare=False)
+    hist_block_wall: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(
+            "repro_block_wall_seconds", "Wall time of one decode_block",
+            LATENCY_BUCKETS_S), repr=False, compare=False)
+    hist_nfe_per_token: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(
+            "repro_nfe_per_token", "Model evaluations per emitted token",
+            NFE_BUCKETS), repr=False, compare=False)
 
     def sample_tick(self, live_rows: int, tick_dt: float) -> None:
-        self.ticks += 1
-        self.wall_time_s += tick_dt
-        if live_rows:
-            self.busy_time_s += tick_dt
-        if self.max_slots:
-            self.occupancy_weighted += (live_rows / self.max_slots) * tick_dt
+        with self._lock:
+            self.ticks += 1
+            self.wall_time_s += tick_dt
+            if live_rows:
+                self.busy_time_s += tick_dt
+            if self.max_slots:
+                self.occupancy_weighted += \
+                    (live_rows / self.max_slots) * tick_dt
 
     def add_request(self, rm: RequestMetrics) -> None:
-        self.requests.append(rm)
-        self.total_nfe += rm.nfe
-        self.total_host_syncs += rm.host_syncs
-        self.total_logit_syncs += rm.logit_syncs
+        with self._lock:
+            self.requests.append(rm)
+            self.total_nfe += rm.nfe
+            self.total_host_syncs += rm.host_syncs
+            self.total_logit_syncs += rm.logit_syncs
+        self.hist_ttfb.observe(rm.ttfb_s)
+        self.hist_queue.observe(rm.queue_s)
+        self.hist_nfe_per_token.observe(rm.nfe / max(rm.n_tokens, 1))
+
+    @property
+    def histograms(self) -> List[Histogram]:
+        return [self.hist_ttfb, self.hist_queue, self.hist_block_wall,
+                self.hist_nfe_per_token]
 
     # ------------------------------------------------------ aggregates
 
     @property
     def total_tokens(self) -> int:
-        return sum(r.n_tokens for r in self.requests)
+        with self._lock:
+            return sum(r.n_tokens for r in self.requests)
 
     @property
     def throughput(self) -> float:
         """Generated tokens per second of scheduler wall time."""
-        return self.total_tokens / max(self.wall_time_s, 1e-9)
+        with self._lock:
+            tokens = sum(r.n_tokens for r in self.requests)
+            return tokens / max(self.wall_time_s, 1e-9)
 
     @property
     def mean_occupancy(self) -> float:
-        return self.occupancy_weighted / max(self.wall_time_s, 1e-9)
+        with self._lock:
+            return self.occupancy_weighted / max(self.wall_time_s, 1e-9)
 
     @property
     def total_blocks(self) -> int:
-        return sum(r.n_blocks for r in self.requests)
+        with self._lock:
+            return sum(r.n_blocks for r in self.requests)
 
     def snapshot(self) -> Dict:
-        lat = [r.latency_s for r in self.requests]
-        ttfb = [r.ttfb_s for r in self.requests]
-        blocks = self.total_blocks
+        with self._lock:
+            requests = list(self.requests)
+            wall = self.wall_time_s
+            occ = self.occupancy_weighted
+            total_nfe = self.total_nfe
+            total_syncs = self.total_host_syncs
+        lat = [r.latency_s for r in requests]
+        ttfb = [r.ttfb_s for r in requests]
+        tokens = sum(r.n_tokens for r in requests)
+        blocks = sum(r.n_blocks for r in requests)
         return {
-            "requests": len(self.requests),
-            "tokens": self.total_tokens,
-            "wall_time_s": self.wall_time_s,
-            "throughput_tok_s": self.throughput,
-            "mean_occupancy": self.mean_occupancy,
-            "total_nfe": self.total_nfe,
-            "nfe_per_request": (self.total_nfe / len(self.requests)
-                                if self.requests else 0.0),
+            "requests": len(requests),
+            "tokens": tokens,
+            "wall_time_s": wall,
+            "throughput_tok_s": tokens / max(wall, 1e-9),
+            "mean_occupancy": occ / max(wall, 1e-9),
+            "total_nfe": total_nfe,
+            "nfe_per_request": (total_nfe / len(requests)
+                                if requests else 0.0),
             # decode-loop residency: the fused device loop syncs ~once
             # per block; the legacy host loop once (or more) per step
-            "total_host_syncs": self.total_host_syncs,
-            "host_syncs_per_block": (self.total_host_syncs / blocks
+            "total_host_syncs": total_syncs,
+            "host_syncs_per_block": (total_syncs / blocks
                                      if blocks else 0.0),
-            "device_steps_per_block": (self.total_nfe / blocks
+            "device_steps_per_block": (total_nfe / blocks
                                        if blocks else 0.0),
             "logit_host_copies": self.total_logit_syncs,
             "queue_depth": self.queue_depth,

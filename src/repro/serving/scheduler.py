@@ -47,6 +47,7 @@ from repro.cache.store import HOST_PLACEMENT
 from repro.core.decoder import (DecodeConfig, DecodeState, DiffusionDecoder,
                                 eos_truncate)
 from repro.models.config import ModelConfig
+from repro.obs.trace import span
 from repro.serving.pool import PrefixKVPool
 from repro.serving.types import BlockChunk, Completion, ServeRequest
 
@@ -106,7 +107,8 @@ class BlockScheduler:
                  tokenizer=None, mesh=None, pad_pow2: bool = False,
                  executor=None, batch_multiple: Optional[int] = None,
                  merge_gangs: bool = True,
-                 prefix_cache: Optional[PrefixKVCache] = None):
+                 prefix_cache: Optional[PrefixKVCache] = None,
+                 tracer=None, telemetry=None, block_hist=None):
         self.cfg = cfg
         self.params = params
         self.dcfg = dcfg
@@ -182,6 +184,20 @@ class BlockScheduler:
         self._uid = 0
         self.last_decoded_rows = 0
         self.merges = 0            # cross-gang straggler merges performed
+        # observability (repro.obs) — all optional. ``tracer`` records
+        # queue/decode/block spans on the request's async track plus
+        # prefill/decode_block spans on this engine's thread track
+        # (``pid`` names the track; the owning EngineLoop sets it);
+        # ``telemetry`` accumulates the per-block BlockStats the decoder
+        # harvests; ``block_hist`` observes per-block wall time.
+        self.tracer = tracer
+        self.telemetry = telemetry
+        self.block_hist = block_hist
+        self.pid = 0
+        # innermost open async span per traced uid ("queue" | "decode"
+        # | "paused") — the bookkeeping that keeps span trees balanced
+        # through cancel/preempt/deadline paths
+        self._span_state: Dict[int, str] = {}
 
     # ------------------------------------------------------ bookkeeping
 
@@ -217,7 +233,7 @@ class BlockScheduler:
     # ------------------------------------------------------ submission
 
     def submit(self, prompt_tokens: np.ndarray, gen_len: int,
-               max_tokens: int) -> ServeRequest:
+               max_tokens: int, trace_id: str = "") -> ServeRequest:
         """Admission control: reject (raise) beyond ``max_waiting``."""
         if self.max_waiting is not None \
                 and len(self.waiting) >= self.max_waiting:
@@ -226,7 +242,12 @@ class BlockScheduler:
                 f"{self.max_waiting}")
         self._uid += 1
         req = ServeRequest(self._uid, np.asarray(prompt_tokens, np.int32),
-                           gen_len, max_tokens, time.perf_counter())
+                           gen_len, max_tokens, time.perf_counter(),
+                           trace_id=trace_id)
+        if self.tracer is not None and trace_id:
+            self.tracer.async_begin(trace_id, "queue", pid=self.pid,
+                                    uid=req.uid)
+            self._span_state[req.uid] = "queue"
         if self.prefix_cache is not None:
             # expected hit length: reported up the stack (router
             # affinity, Completion) and the basis of hit-aware
@@ -313,6 +334,31 @@ class BlockScheduler:
         self._cancel.clear()   # flags never outlive their sweep
         self._compact()
         return chunks, completions
+
+    # ------------------------------------------------------ span hooks
+
+    def _trace_admit(self, req: ServeRequest) -> None:
+        """Request entered a gang: close "queue" (first admission only
+        — a resumed request's queue span closed long ago) and open
+        "decode"."""
+        if self.tracer is None or not req.trace_id:
+            return
+        if self._span_state.get(req.uid) == "queue":
+            self.tracer.async_end(req.trace_id, "queue", pid=self.pid)
+        self.tracer.async_begin(req.trace_id, "decode", pid=self.pid,
+                                uid=req.uid)
+        self._span_state[req.uid] = "decode"
+
+    def _trace_finish(self, req: ServeRequest) -> None:
+        """Request reached its terminal Completion: close whichever
+        span is still open (decode for active/preempt-cancelled rows,
+        queue for cancelled-while-waiting; a paused request has
+        nothing open — its decode span closed at extraction)."""
+        if self.tracer is None or not req.trace_id:
+            return
+        open_span = self._span_state.pop(req.uid, None)
+        if open_span in ("queue", "decode"):
+            self.tracer.async_end(req.trace_id, open_span, pid=self.pid)
 
     # ------------------------------------------------------ merge
 
@@ -418,11 +464,15 @@ class BlockScheduler:
         # the decode loop so occupancy isn't attributed post-compaction
         self.last_decoded_rows = self.live_rows
         for gang in self.gangs:
+            t0_ns = time.perf_counter_ns()
             gang.decoder.decode_block(gang.state)
+            t1_ns = time.perf_counter_ns()
+            self._drain_block_stats(gang, t0_ns, t1_ns)
             c, comp = self._harvest(gang, gang.state.nfe - gang.nfe_seen,
                                     gang.state.host_syncs - gang.syncs_seen,
                                     gang.state.logit_syncs
-                                    - gang.logit_syncs_seen)
+                                    - gang.logit_syncs_seen,
+                                    t0_ns=t0_ns, t1_ns=t1_ns)
             gang.nfe_seen = gang.state.nfe
             gang.syncs_seen = gang.state.host_syncs
             gang.logit_syncs_seen = gang.state.logit_syncs
@@ -433,6 +483,30 @@ class BlockScheduler:
         # decodes at full occupancy
         self._admit()
         return chunks, completions
+
+    def _drain_block_stats(self, gang: Gang, t0_ns: int,
+                           t1_ns: int) -> None:
+        """Route the BlockStats the decoder just appended: into the
+        telemetry aggregator, the block-wall histogram, and a
+        thread-track trace span for this engine's timeline. Drained
+        every tick so compaction (which builds fresh states) never
+        loses or double-counts a block."""
+        stats = gang.state.block_stats
+        if not stats:
+            return
+        gang.state.block_stats = []
+        if self.telemetry is not None:
+            self.telemetry.extend(stats)
+        if self.block_hist is not None:
+            for bs in stats:
+                self.block_hist.observe(bs.wall_s)
+        if self.tracer is not None:
+            last = stats[-1]
+            self.tracer.complete(
+                "decode_block", t0_ns, t1_ns, pid=self.pid,
+                method=last.method, block=last.block_idx,
+                batch=last.batch, steps=last.steps,
+                committed=last.tokens_committed)
 
     # ------------------------------------------------------ admission
 
@@ -450,6 +524,7 @@ class BlockScheduler:
                     decoder.prime_prompt_kv(state)
             if req.admit_time < 0:   # resume keeps the first admission
                 req.admit_time = time.perf_counter()
+            self._trace_admit(req)
             self.gangs.append(Gang(decoder, state, [req]))
             free -= state.batch
         if free <= 0 or not self.waiting:
@@ -537,12 +612,15 @@ class BlockScheduler:
         cache = None
         if decoder.dcfg.method != "vanilla":
             cache = self.pool.acquire(padded, P + gen_len)
-        state = decoder.prefill(prompts, cache=cache)
+        with span(self.tracer, "prefill", pid=self.pid, batch=padded,
+                  prompt_len=P):
+            state = decoder.prefill(prompts, cache=cache)
         now = time.perf_counter()
         for i, r in enumerate(batch_reqs):
             r.admit_time = now
             if state.prefix_hit_tokens is not None:
                 r.cache_hit_tokens = int(state.prefix_hit_tokens[i])
+            self._trace_admit(r)
         rows: List[Optional[ServeRequest]] = \
             list(batch_reqs) + [None] * (padded - n)
         return Gang(decoder, state, rows)
@@ -565,6 +643,7 @@ class BlockScheduler:
         req.finish_time = now
         admit = req.admit_time if req.admit_time >= 0 else now
         first = req.first_block_time if req.first_block_time >= 0 else now
+        self._trace_finish(req)
         return Completion(
             uid=req.uid, text=self._decode_text(gen), tokens=gen,
             latency_s=now - req.submit_time, nfe=req.nfe,
@@ -574,10 +653,12 @@ class BlockScheduler:
             max_tokens=req.max_tokens, cancelled=cancelled,
             host_syncs=req.host_syncs, logit_syncs=req.logit_syncs,
             cache_hit_tokens=req.cache_hit_tokens,
-            expected_hit_tokens=req.expected_hit_tokens)
+            expected_hit_tokens=req.expected_hit_tokens,
+            trace_id=req.trace_id)
 
     def _harvest(self, gang: Gang, dnfe: int, dsync: int = 0,
-                 dlogit: int = 0):
+                 dlogit: int = 0, t0_ns: Optional[int] = None,
+                 t1_ns: Optional[int] = None):
         st = gang.state
         K = gang.decoder.dcfg.block_size
         P = st.prompt_len
@@ -612,6 +693,13 @@ class BlockScheduler:
                 chunks.append(BlockChunk(req.uid, bidx, toks, text,
                                          finished,
                                          bool((toks == eos).any())))
+                if self.tracer is not None and req.trace_id \
+                        and t0_ns is not None:
+                    # the decoded block, attributed to each live
+                    # request's async track with the gang's bounds
+                    self.tracer.async_span(
+                        req.trace_id, f"block {bidx}", t0_ns, t1_ns,
+                        pid=self.pid, nfe_delta=dnfe)
             if finished:
                 gang.emitted[i] = True
                 self._preempt.discard(req.uid)  # flags die with request
@@ -634,6 +722,12 @@ class BlockScheduler:
                     self._preempt.discard(req.uid)
                     sub = gang.decoder.take_rows(st, [i], alloc_cache=False)
                     req.preempted += 1
+                    if self.tracer is not None and req.trace_id:
+                        self.tracer.async_end(req.trace_id, "decode",
+                                              pid=self.pid)
+                        self.tracer.instant("preempt", pid=self.pid,
+                                            uid=req.uid)
+                        self._span_state[req.uid] = "paused"
                     self.paused.append((req, sub, gang.decoder))
                     gang.requests[i] = None
                     gang.emitted[i] = True

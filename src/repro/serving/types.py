@@ -32,6 +32,7 @@ class ServeRequest:
     cache_hit_tokens: int = 0          # prompt tokens whose prefill KV was
                                        # assembled from the cross-request
                                        # prefix cache (0 = cold)
+    trace_id: str = ""                 # repro.obs correlation id ("" = off)
 
     @property
     def bucket(self):
@@ -77,6 +78,7 @@ class Completion:
     cache_hit_tokens: int = 0          # prefix-cache tokens reused at
                                        # prefill (repro.cache)
     expected_hit_tokens: int = 0       # router/admission-time estimate
+    trace_id: str = ""                 # repro.obs correlation id ("" = off)
 
     @property
     def tokens_per_s(self) -> float:

@@ -18,11 +18,14 @@ import numpy as np
 from repro.data.synthetic import ArithmeticDataset
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.config import ModelConfig
+from repro.obs.log import get_logger, setup_logging
 from repro.models.model import init_params
 from repro.training import checkpoint
 from repro.training.loss import diffusion_loss
 from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
                                       adamw_update)
+
+log = get_logger(__name__)
 
 
 @dataclasses.dataclass
@@ -51,6 +54,10 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh=None,
 
 
 def train(cfg: ModelConfig, tcfg: TrainConfig, params=None, verbose=True):
+    if verbose and not get_logger("repro").handlers:
+        # direct library use (examples, tests with verbose=True): keep
+        # progress visible without a CLI having configured logging
+        setup_logging()
     tok = ByteTokenizer(cfg.vocab_size)
     ds = ArithmeticDataset(tok, seq_len=tcfg.seq_len, seed=tcfg.seed)
     key = jax.random.PRNGKey(tcfg.seed)
@@ -73,9 +80,9 @@ def train(cfg: ModelConfig, tcfg: TrainConfig, params=None, verbose=True):
             m["step"] = step
             history.append(m)
             if verbose:
-                print(f"step {step:5d} loss {m['loss']:.4f} "
-                      f"masked_acc {m['masked_acc']:.3f} lr {m['lr']:.2e} "
-                      f"({time.perf_counter()-t0:.1f}s)")
+                log.info("step %5d loss %.4f masked_acc %.3f lr %.2e "
+                         "(%.1fs)", step, m["loss"], m["masked_acc"],
+                         m["lr"], time.perf_counter() - t0)
     if tcfg.checkpoint_path:
         checkpoint.save(tcfg.checkpoint_path, params,
                         {"steps": tcfg.steps, "config": cfg.name})
