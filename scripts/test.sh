@@ -64,6 +64,60 @@ if bad:
     sys.exit(1)
 print("lint: no bare print() outside src/repro/launch")
 EOF
+    python - <<'EOF'
+# XLA/JAX process environment is mutated in exactly one place:
+# repro.launch (host budgets, fake device counts, platform pins, the
+# persistent compile cache). Anywhere else, a write to XLA_FLAGS /
+# PJRT_NPROC / JAX_PLATFORMS silently depends on import order and
+# defeats the per-engine budget — so the lint walks every assignment,
+# os.environ[...] store, setdefault, update, putenv, and pop for those
+# keys. Benchmarks compose child env dicts via
+# repro.launch.host.budget_env (pure, no process mutation) instead.
+import ast, pathlib, sys
+KEYS = ("XLA_FLAGS", "PJRT_NPROC", "JAX_PLATFORMS")
+
+def names_env(node):        # os.environ or environ
+    return (isinstance(node, ast.Attribute) and node.attr == "environ") \
+        or (isinstance(node, ast.Name) and node.id == "environ")
+
+def key_is_xla(node):
+    return isinstance(node, ast.Constant) and node.value in KEYS
+
+bad = []
+roots = [pathlib.Path("src/repro"), pathlib.Path("benchmarks")]
+for root in roots:
+    for path in sorted(root.rglob("*.py")):
+        if path.parts[:3] == ("src", "repro", "launch"):
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            hit = False
+            # os.environ["XLA_FLAGS"] = ... (incl. augmented/annotated)
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                hit = any(isinstance(t, ast.Subscript) and names_env(t.value)
+                          and key_is_xla(t.slice) for t in tgts)
+            # os.environ.setdefault/update/pop("XLA_FLAGS", ...), putenv
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute):
+                f = node.func
+                if f.attr in ("setdefault", "pop", "update") \
+                        and names_env(f.value):
+                    hit = any(key_is_xla(a) for a in node.args) or any(
+                        kw.arg in KEYS for kw in node.keywords)
+                elif f.attr == "putenv":
+                    hit = any(key_is_xla(a) for a in node.args)
+            if hit:
+                bad.append(f"{path}:{node.lineno}")
+if bad:
+    print("lint: XLA env mutated outside repro.launch "
+          "(route through repro.launch.host):")
+    print("\n".join(f"  {b}" for b in bad))
+    sys.exit(1)
+print("lint: XLA env (XLA_FLAGS/PJRT_NPROC/JAX_PLATFORMS) only "
+      "mutated in repro.launch")
+EOF
 }
 
 run_suite() {
@@ -117,14 +171,18 @@ run_server() {
 }
 
 run_sharded() {
-    # mesh-parallel gang decode: the pytest file drives a subprocess
-    # that forces an 8-device host mesh (the flag must never be set in
-    # the main pytest process — see tests/conftest.py), then the
-    # sharded bench exercises 1/2-engine routing over real sockets
-    python -m pytest -x -q tests/test_sharded_decode.py
+    # mesh-parallel gang decode: the pytest files drive subprocesses
+    # that force an 8-device host mesh (the flag must never be set in
+    # the main pytest process — see tests/conftest.py). test_prewarm is
+    # the recompile watchdog (zero post-warm compiles under mixed-
+    # method multi-bucket load); test_steal is the work-stealing
+    # identity/lifecycle suite. Then the sharded bench exercises
+    # budgeted 1/2-engine routing over real sockets.
+    python -m pytest -x -q tests/test_sharded_decode.py \
+        tests/test_prewarm.py tests/test_steal.py
     echo "== bench_sharded --quick (8 forced host devices) =="
-    # the bench sets its own device-count flag (REPRO_XLA_FLAGS to
-    # override) — don't clobber a developer's ambient XLA_FLAGS here
+    # the bench composes each child's env via repro.launch.host
+    # (budget_env) — don't clobber a developer's ambient XLA_FLAGS here
     python benchmarks/bench_sharded.py --quick \
         --out results/BENCH_sharded_quick.json
 }

@@ -293,7 +293,13 @@ class DiffusionDecoder:
             def f(p, toks, pos, cache):
                 out = apply_model(self.cfg, p, tokens=toks, positions=pos,
                                   mode="encode", cache=cache, use_kernels=uk)
-                return out.cache, out.kv_valid
+                c = out.cache
+                if self.executor is not None:
+                    # keep pooled buffers sharding-canonical (see the
+                    # matching constraint in the fused fn)
+                    c = self.executor.constrain_cache(
+                        c, toks.shape[0], toks.shape[1])
+                return c, out.kv_valid
             self._fns["prefill"] = jax.jit(f)
         return self._fns["prefill"]
 
@@ -372,7 +378,13 @@ class DiffusionDecoder:
                                   mode="append", cache=cache,
                                   kv_valid=kv_valid, skip_head=True,
                                   use_kernels=uk)
-                return out.cache
+                c = out.cache
+                if self.executor is not None:
+                    # keep pooled buffers sharding-canonical (see the
+                    # matching constraint in the fused fn)
+                    c = self.executor.constrain_cache(
+                        c, toks.shape[0], toks.shape[1])
+                return c
             self._fns["chunk_prefill"] = jax.jit(f)
         return self._fns["chunk_prefill"]
 
@@ -998,6 +1010,13 @@ class DiffusionDecoder:
                 done = done | hit
             else:
                 n_hit = jnp.int32(0)
+            if self.executor is not None:
+                # pin the output cache to the canonical placement so a
+                # recycled pool buffer is sharding-identical to a fresh
+                # one — without this, every (batch, block) shape traces
+                # twice (fresh-path at pre-warm, recycled-path at serve)
+                cache = self.executor.constrain_cache(
+                    cache, x.shape[0], x.shape[1])
             return (x, committed, done, steps, n_hit, cache,
                     valid_mask, cached_mask, vsums, counts, hist, fill_n)
 

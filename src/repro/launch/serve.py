@@ -17,6 +17,11 @@ routed least-loaded; on CPU use --force-host-devices to fake chips):
 
     PYTHONPATH=src python -m repro.launch.serve --arch tiny --http 8000 \
         --mesh 2,1 --engines 2 --force-host-devices 4
+
+Multi-engine hosts should also budget and pre-warm (repro.launch.host):
+
+    ... --engines 2 --host-threads-per-engine 2 \
+        --compile-cache-dir results/compile_cache --prewarm 16:32
 """
 from __future__ import annotations
 
@@ -32,6 +37,22 @@ def _parse_mesh(s: str):
     except ValueError:
         raise SystemExit(f"--mesh wants 'data,model' ints, got {s!r}")
     return data, model
+
+
+def _parse_prewarm(s: str):
+    """``"P:G[,P:G...]"`` -> [(prompt_len, gen_len), ...]."""
+    buckets = []
+    for part in s.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            p, g = (int(v) for v in part.split(":"))
+        except ValueError:
+            raise SystemExit(
+                f"--prewarm wants 'P:G[,P:G...]' ints, got {part!r}")
+        buckets.append((p, g))
+    return buckets
 
 
 def main():
@@ -88,6 +109,24 @@ def main():
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="fake this many host devices via XLA_FLAGS "
                          "(CI/demo; must be >= engines * data * model)")
+    ap.add_argument("--host-threads-per-engine", type=int, default=0,
+                    metavar="T",
+                    help="XLA:CPU intra-op threads each engine's "
+                         "dispatches may use; 0 = cores // engines "
+                         "(repro.launch.host, applied before jax init)")
+    ap.add_argument("--compile-cache-dir", default="", metavar="DIR",
+                    help="JAX persistent compilation cache: restarts "
+                         "and sibling engine processes reuse compiled "
+                         "fused-block variants instead of recompiling")
+    ap.add_argument("--prewarm", default="", metavar="P:G[,P:G...]",
+                    help="compile every fused-block variant for these "
+                         "(prompt_len:gen_len) shape buckets on every "
+                         "engine BEFORE the HTTP front end admits "
+                         "traffic; later compiles log loudly and count "
+                         "in repro_post_warm_compiles_total")
+    ap.add_argument("--no-steal", action="store_true",
+                    help="disable block-boundary work stealing between "
+                         "engine loops (--engines > 1)")
     ap.add_argument("--trace-dir", default="", metavar="DIR",
                     help="record request span trees + decode timelines "
                          "and write Chrome-trace JSON (Perfetto-"
@@ -118,14 +157,27 @@ def main():
         raise SystemExit("--prefix-cache has no effect with --method "
                          "vanilla (no KV cache to reuse)")
     mesh_dims = _parse_mesh(args.mesh) if args.mesh else None
+    prewarm_buckets = _parse_prewarm(args.prewarm) if args.prewarm else []
 
+    # host env knobs (thread budget, fake devices) must land before the
+    # first jax backend init — repro.launch.host is the one sanctioned
+    # XLA-env mutation point (scripts/test.sh lint enforces this)
+    from repro.launch import host as host_budgeting
+    budget = host_budgeting.compute_host_budget(
+        args.engines, args.host_threads_per_engine)
+    host_budgeting.apply_host_budget(budget)
     if args.force_host_devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "") +
-            f" --xla_force_host_platform_device_count="
-            f"{args.force_host_devices}")
+        host_budgeting.force_host_device_count(args.force_host_devices)
 
     import jax
+
+    if args.compile_cache_dir:
+        if host_budgeting.enable_compile_cache(args.compile_cache_dir):
+            print(f"persistent compile cache at {args.compile_cache_dir}")
+        else:
+            print("persistent compile cache unsupported by this jax "
+                  "build; continuing without")
+    print(f"host budget: {budget.describe()}")
     from repro.core.decoder import DecodeConfig
     from repro.core.engine import ServingEngine
     from repro.data.synthetic import ArithmeticDataset
@@ -182,7 +234,7 @@ def main():
                 else HOST_PLACEMENT)
         return ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
                                 tokenizer=tok, executor=ex,
-                                prefix_cache=store)
+                                prefix_cache=store, host_budget=budget)
 
     tracer = None
     if args.trace_dir:
@@ -204,14 +256,28 @@ def main():
             print(f"chrome trace written to {path} "
                   f"(open in ui.perfetto.dev)")
 
+    def prewarm_all(engines):
+        if not prewarm_buckets:
+            return
+        # sequential, before the front end opens admission: every
+        # (shape bucket x method x placement) fused-block variant is
+        # compiled now, so steady-state traffic never pays a compile
+        for i, eng in enumerate(engines):
+            rep = eng.prewarm(prewarm_buckets)
+            print(f"engine-{i} prewarmed {rep['variants']} variant(s) "
+                  f"over {len(rep['buckets'])} bucket(s) in "
+                  f"{rep['seconds']:.1f}s")
+
     if args.http:
         from repro.server import run as run_http
         engines = [make_engine(ex) for ex in executors]
         attach_profiler(engines[0])
+        prewarm_all(engines)
         try:
             run_http(engines if len(engines) > 1 else engines[0],
                      host=args.http_host, port=args.http,
-                     max_pending=args.max_pending, tracer=tracer)
+                     max_pending=args.max_pending, tracer=tracer,
+                     steal=not args.no_steal)
         finally:
             export_trace()
         return
@@ -222,6 +288,7 @@ def main():
         if tracer is not None:
             eng.set_tracer(tracer, "engine-0")
         attach_profiler(eng)
+        prewarm_all([eng])
         for s in samples:
             eng.submit(s.prompt, max_tokens=args.gen_len,
                        trace_id=tracer.new_trace_id()

@@ -26,6 +26,8 @@ costs one ``is None`` test per call site, and telemetry rides inside
 the already-compiled fused loop, so ``host_syncs_per_block`` is
 unchanged with observability on.
 """
+from repro.obs.compile import (CompileWatch, persistent_cache_counters,
+                               watch_persistent_cache)
 from repro.obs.log import get_logger, setup_logging
 from repro.obs.metrics import Histogram, device_memory_stats
 from repro.obs.profiler import BlockProfiler
@@ -36,5 +38,6 @@ from repro.obs.trace import Tracer, span
 __all__ = [
     "Tracer", "span", "BlockStats", "TelemetryAggregator", "CONF_BUCKETS",
     "Histogram", "device_memory_stats", "BlockProfiler",
+    "CompileWatch", "watch_persistent_cache", "persistent_cache_counters",
     "get_logger", "setup_logging",
 ]

@@ -436,6 +436,33 @@ class HttpFrontend:
              "gauge", "Mean decode-slot occupancy (wall-time weighted).")
         emit("repro_throughput_tok_per_s", f"{tput:.6f}", "gauge",
              "Generated tokens per second of scheduler wall time.")
+        # compile ledger (repro.obs.CompileWatch) + host budget
+        emit("repro_compile_misses_total", tot("compile_misses"),
+             "counter", "New jit variants compiled across engines.")
+        emit("repro_compile_hits_total", tot("compile_hits"), "counter",
+             "Jit-dispatching calls fully served by compiled variants.")
+        emit("repro_compile_seconds_total",
+             f"{tot('compile_seconds'):.6f}", "counter",
+             "Wall seconds attributed to variant-building calls.")
+        emit("repro_post_warm_compiles_total", tot("post_warm_compiles"),
+             "counter", "Variants compiled after pre-warm declared the "
+             "engine warm (should stay 0).")
+        emit("repro_prewarmed_engines", tot("prewarmed"), "gauge",
+             "Engines whose startup pre-warm completed.")
+        emit("repro_host_threads_per_engine",
+             snaps[0]["host_threads"], "gauge",
+             "Budgeted XLA:CPU intra-op threads per engine (0 = "
+             "unbudgeted).")
+        emit("repro_steals_total", tot("steals_in"), "counter",
+             "Requests migrated between engines by block-boundary work "
+             "stealing.")
+        from repro.obs.compile import persistent_cache_counters
+        pc = persistent_cache_counters()
+        emit("repro_persistent_cache_hits_total", pc["hits"], "counter",
+             "Jax persistent compilation cache hits (process-wide).")
+        emit("repro_persistent_cache_misses_total", pc["misses"],
+             "counter", "Jax persistent compilation cache misses "
+             "(process-wide).")
         for metric, key in (("repro_latency_seconds", "latency"),
                             ("repro_ttfb_quantile_seconds", "ttfb")):
             vals = [getattr(r, f"{key}_s")
@@ -527,7 +554,26 @@ class HttpFrontend:
                     ("throughput_tok_per_s", "throughput_tok_s", "gauge",
                      "Tokens/s per engine.", "{:.6f}"),
                     ("mean_occupancy", "mean_occupancy", "gauge",
-                     "Decode-slot occupancy per engine.", "{:.6f}")):
+                     "Decode-slot occupancy per engine.", "{:.6f}"),
+                    ("busy_seconds_total", "busy_time_s", "counter",
+                     "Wall seconds with >=1 live decode row per engine.",
+                     "{:.6f}"),
+                    ("queue_wait_seconds_total", "queue_wait_s",
+                     "counter", "Summed submit-to-admission wait per "
+                     "engine.", "{:.6f}"),
+                    ("steals_in_total", "steals_in", "counter",
+                     "Requests adopted via work stealing per engine.",
+                     "{}"),
+                    ("steals_out_total", "steals_out", "counter",
+                     "Requests given up via work stealing per engine.",
+                     "{}"),
+                    ("compile_misses_total", "compile_misses", "counter",
+                     "Jit variants compiled per engine.", "{}"),
+                    ("post_warm_compiles_total", "post_warm_compiles",
+                     "counter", "Post-pre-warm compiles per engine "
+                     "(should stay 0).", "{}"),
+                    ("host_threads", "host_threads", "gauge",
+                     "Budgeted intra-op threads per engine.", "{}")):
                 out.append(f"# HELP repro_engine_{name} {help_text}")
                 out.append(f"# TYPE repro_engine_{name} {mtype}")
                 for i, s in enumerate(snaps):
@@ -542,25 +588,28 @@ class HttpFrontend:
         return "\n".join(out) + "\n"
 
 
-def _front(engines, max_pending: int, tracer=None):
+def _front(engines, max_pending: int, tracer=None, steal: bool = True):
     """One EngineLoop per engine; >1 engine routes through
-    ``EngineRouter`` (least-loaded by live rows). ``tracer`` claims a
-    named track group per engine."""
+    ``EngineRouter`` (least-loaded by live rows, block-boundary work
+    stealing unless ``steal=False``). ``tracer`` claims a named track
+    group per engine."""
     engines = engines if isinstance(engines, (list, tuple)) else [engines]
     loops = [EngineLoop(e, max_pending=max_pending, tracer=tracer,
                         index=i) for i, e in enumerate(engines)]
     if len(loops) == 1:
         return loops[0]
     from repro.server.router import EngineRouter
-    return EngineRouter(loops)
+    return EngineRouter(loops, steal=steal)
 
 
 async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
-                max_pending: int = 64, tracer=None) -> None:
+                max_pending: int = 64, tracer=None,
+                steal: bool = True) -> None:
     """Run the HTTP front end until cancelled, then drain gracefully.
     ``engine`` may be one ``ContinuousEngine`` or a list (one per
-    device/mesh; requests are routed least-loaded)."""
-    frontend = HttpFrontend(_front(engine, max_pending, tracer),
+    device/mesh; requests are routed least-loaded and rebalanced by
+    work stealing unless ``steal=False``)."""
+    frontend = HttpFrontend(_front(engine, max_pending, tracer, steal),
                             host=host, port=port, tracer=tracer)
     await frontend.start()
     log.info("repro.server listening on http://%s:%s (POST "
@@ -575,9 +624,10 @@ async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
 
 
 def run(engine, host: str = "127.0.0.1", port: int = 8000,
-        max_pending: int = 64, tracer=None) -> None:
+        max_pending: int = 64, tracer=None, steal: bool = True) -> None:
     """Blocking entry point used by ``repro.launch.serve --http``."""
     try:
-        asyncio.run(serve(engine, host, port, max_pending, tracer=tracer))
+        asyncio.run(serve(engine, host, port, max_pending, tracer=tracer,
+                          steal=steal))
     except KeyboardInterrupt:
         pass

@@ -22,6 +22,20 @@ All engine/scheduler state is touched exclusively by the decode thread
 the serving subsystem itself needs no locks. Deadlines (``timeout_s``)
 are enforced here each iteration: an expired request is cancelled with
 reason ``deadline`` and counted in ``ServeMetrics.deadline_misses``.
+
+Block-boundary work stealing (multi-engine fleets): when this loop has
+free slots and nothing queued, it asks the ``EngineRouter`` for the
+most-backlogged sibling and posts a ``steal`` command to it. The
+*victim's* decode thread services the command between ticks — i.e. at a
+block boundary, where every row's state is at rest — handing over (in
+cheapest-first order) scheduler-waiting requests, front-end-pending
+tickets, and finally parked (preempted) rows whose host-side
+``DecodeState`` the thief adopts and resumes through the normal
+pool-acquire + radix-re-prime path. Ticket ownership (``ticket.loop``)
+moves with the request so cancels and deadlines keep routing to
+whichever engine currently holds it; in-flight accounting transfers
+under both loops' locks. This unfreezes the at-admission load split
+that placement-only routing produces (ROADMAP open item 1).
 """
 from __future__ import annotations
 
@@ -88,6 +102,11 @@ class EngineLoop:
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._drain_on_stop = True
+        # block-boundary work stealing (set by EngineRouter)
+        self.router = None
+        self.steal = False
+        self._steal_inflight = False        # one outstanding steal ask
+        self._next_steal_t = 0.0            # backoff after an empty grant
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="repro-engine-loop")
         engine.on_chunk(None, self._on_chunk)
@@ -192,6 +211,7 @@ class EngineLoop:
                     return
             self._check_deadlines()
             self._feed()
+            self._maybe_steal()
             if not eng.scheduler.idle:
                 try:
                     for comp in eng.step():
@@ -228,6 +248,113 @@ class EngineLoop:
                            [-ticket.req.priority, next(self._seq), ticket])
         elif kind == "cancel":
             self._cancel_ticket(ticket, reason)
+        elif kind == "steal":            # I'm the victim: (thief, k)
+            thief, k = ticket
+            self._serve_steal(thief, k)
+        elif kind == "steal_give":       # I'm the thief: a queued ticket
+            self.engine.metrics.steals_in += 1
+            heapq.heappush(self._pending,
+                           [-ticket.req.priority, next(self._seq), ticket])
+        elif kind == "adopt":            # I'm the thief: a parked row
+            self._adopt(*ticket)
+        elif kind == "steal_done":       # grant report: ticket = count
+            self._steal_inflight = False
+            if not ticket:
+                self._next_steal_t = (time.perf_counter()
+                                      + 10 * self.idle_poll_s)
+
+    # ------------------------------------------------- work stealing
+
+    def _maybe_steal(self) -> None:
+        """Thief side: with free slots and an empty local queue, ask the
+        router for the most-backlogged sibling and post it a steal
+        command (serviced on the victim's decode thread at its next
+        block boundary). One outstanding ask at a time; an empty grant
+        backs off so an idle fleet doesn't spin on steal traffic."""
+        if (self.router is None or not self.steal or self._steal_inflight
+                or self._stop.is_set()):
+            return
+        if time.perf_counter() < self._next_steal_t:
+            return
+        sched = self.engine.scheduler
+        if self._pending or sched.waiting or sched.paused:
+            return
+        free = sched.max_slots - sched.slots_used
+        if free <= 0:
+            return
+        victim, backlog = self.router.pick_victim(self)
+        if victim is None:
+            return
+        self._steal_inflight = True
+        victim._cmds.put(("steal", (self, max(1, min(free, backlog // 2))),
+                          None))
+
+    def _serve_steal(self, thief: "EngineLoop", k: int) -> None:
+        """Victim side, on the decode thread between ticks: grant up to
+        ``k`` requests, cheapest-to-move first — scheduler-waiting (no
+        state), front-end-pending (never reached the engine), then
+        parked rows (host DecodeState the thief resumes)."""
+        given = 0
+        for _ in range(k):
+            if not self._steal_one(thief):
+                break
+            given += 1
+        if given:
+            log.info("stole %d request(s): engine %d -> engine %d",
+                     given, self.index, thief.index)
+        thief._cmds.put(("steal_done", given, None))
+
+    def _steal_one(self, thief: "EngineLoop") -> bool:
+        eng = self.engine
+        req = eng.steal_waiting()
+        if req is not None:
+            ticket = self._live.pop(req.uid, None)
+            if ticket is None:       # direct engine submission: not ours
+                eng.scheduler.waiting.append(req)
+                return False
+            ticket.uid = None        # thief re-submits through its feed
+            self._transfer(ticket, thief)
+            thief._cmds.put(("steal_give", ticket, None))
+            return True
+        while self._pending:
+            _, _, ticket = heapq.heappop(self._pending)
+            if ticket.done:
+                continue
+            eng.metrics.steals_out += 1
+            self._transfer(ticket, thief)
+            thief._cmds.put(("steal_give", ticket, None))
+            return True
+        out = eng.steal_paused()
+        if out is not None:
+            req, state = out
+            ticket = self._live.pop(req.uid, None)
+            if ticket is None:
+                eng.scheduler.paused.append(
+                    (req, state, eng.scheduler.decoder_for(req.gen_len)))
+                return False
+            ticket.uid = None
+            self._transfer(ticket, thief)
+            thief._cmds.put(("adopt", (ticket, req, state), None))
+            return True
+        return False
+
+    def _transfer(self, ticket: Ticket, thief: "EngineLoop") -> None:
+        """Move in-flight accounting and cancel/deadline ownership to
+        the thief. From here on ``cancel()`` on this loop forwards."""
+        ticket.loop = thief
+        with self._lock:
+            self._inflight -= 1
+        with thief._lock:
+            thief._inflight += 1
+
+    def _adopt(self, ticket: Ticket, req, state) -> None:
+        """Thief side: adopt a stolen parked row. A cancel that raced
+        the handoff already concluded the ticket — drop the state (it
+        holds no device resources; parked rows travel cache-free)."""
+        if ticket.done:
+            return
+        ticket.uid = self.engine.adopt_paused(req, state)
+        self._live[ticket.uid] = ticket
 
     def _feed(self) -> None:
         """Hand queued requests to the scheduler in priority order.
@@ -278,6 +405,12 @@ class EngineLoop:
 
     def _cancel_ticket(self, ticket: Ticket, reason: str) -> None:
         if ticket.done:
+            return
+        if ticket.loop is not None and ticket.loop is not self:
+            # the ticket migrated (work stealing) after this cancel was
+            # queued here — forward to the current owner; acting locally
+            # would cancel whatever request now holds that uid
+            ticket.loop.cancel(ticket, reason)
             return
         ticket.cancel_reason = reason
         if ticket.uid is None:

@@ -26,6 +26,12 @@ Admission: the picked loop may reject (its bounded budget is full);
 the router then tries the remaining loops in load order and only
 re-raises when *every* engine rejected — one hot engine must not turn
 away traffic the others could serve.
+
+Placement-at-admission is no longer final: with ``steal=True`` (the
+default) an idle loop asks ``pick_victim`` for the most-backlogged
+sibling and steals waiting/paused requests from it at block boundaries
+(see ``EngineLoop``), so a load split frozen by a bad heuristic read
+self-corrects instead of persisting for the requests' lifetime.
 """
 from __future__ import annotations
 
@@ -40,9 +46,13 @@ log = get_logger(__name__)
 
 
 class EngineRouter:
-    def __init__(self, loops: List[EngineLoop]):
+    def __init__(self, loops: List[EngineLoop], steal: bool = True):
         assert loops, "EngineRouter needs at least one EngineLoop"
         self.loops = list(loops)
+        self.steal = steal and len(self.loops) > 1
+        for lp in self.loops:
+            lp.router = self
+            lp.steal = self.steal
 
     # ---------------------------------------------------- loop surface
 
@@ -125,3 +135,25 @@ class EngineRouter:
 
     def cancel(self, ticket: Ticket, reason: str = "cancelled") -> None:
         (ticket.loop or self.loops[0]).cancel(ticket, reason)
+
+    # ---------------------------------------------------- stealing
+
+    def pick_victim(self, thief: EngineLoop):
+        """Most-backlogged loop other than ``thief``, where backlog is
+        work beyond what the victim's own free slots will absorb next
+        tick (front-end pending + scheduler waiting + parked rows −
+        free slots). Reads of other threads' state are racy heuristics,
+        same contract as ``_load_order``; the steal handshake itself is
+        command-queue-serialized on the victim's decode thread. Returns
+        ``(loop, backlog)`` or ``(None, 0)``."""
+        best, best_backlog = None, 0
+        for lp in self.loops:
+            if lp is thief or not lp.running:
+                continue
+            sched = lp.engine.scheduler
+            free = max(0, sched.max_slots - sched.slots_used)
+            backlog = (len(lp._pending) + len(sched.waiting)
+                       + len(sched.paused) - free)
+            if backlog > best_backlog:
+                best, best_backlog = lp, backlog
+        return best, best_backlog

@@ -19,15 +19,17 @@ from typing import Iterator, List, Optional, Union
 
 import numpy as np
 
-from repro.core.decoder import DecodeConfig
+from repro.core.decoder import DecodeConfig, DecodeState
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.config import ModelConfig
 from repro.obs.telemetry import TelemetryAggregator
+from repro.obs.trace import span
 from repro.serving.metrics import RequestMetrics, ServeMetrics
 from repro.serving.pool import PrefixKVPool
 from repro.serving.scheduler import BlockScheduler
 from repro.serving.stream import RequestStream, StreamRouter
-from repro.serving.types import BlockChunk, Completion, round_up_blocks
+from repro.serving.types import (BlockChunk, Completion, ServeRequest,
+                                 round_up_blocks)
 
 
 class ContinuousEngine:
@@ -36,10 +38,15 @@ class ContinuousEngine:
                  pool: Optional[PrefixKVPool] = None,
                  max_waiting: Optional[int] = None,
                  tokenizer=None, mesh=None, pad_pow2: bool = False,
-                 executor=None, prefix_cache=None, tracer=None):
+                 executor=None, prefix_cache=None, tracer=None,
+                 host_budget=None):
         self.cfg = cfg
         self.dcfg = dcfg
         self.executor = executor
+        # effective per-engine host compute budget (repro.launch.host
+        # applies it process-wide before jax init; the engine carries it
+        # for /metrics and trace metadata)
+        self.host_budget = host_budget
         self.tok = tokenizer or ByteTokenizer(cfg.vocab_size)
         # one pool per executor: buffers are placed on the executor's
         # mesh and must never migrate (see PrefixKVPool)
@@ -69,6 +76,8 @@ class ContinuousEngine:
         # (repro.obs.profiler.BlockProfiler); ticked from step()
         self.profiler = None
         self._prof_blocks_seen = 0
+        if host_budget is not None:
+            self.metrics.host_threads = host_budget.intra_op
 
     def set_tracer(self, tracer, label: str) -> None:
         """Attach (or re-attach) a tracer and claim a named track for
@@ -78,6 +87,14 @@ class ContinuousEngine:
         self.obs_pid = tracer.process(label)
         self.scheduler.tracer = tracer
         self.scheduler.pid = self.obs_pid
+        if self.host_budget is not None:
+            # stamp the effective budget onto the engine's track so a
+            # trace always records what resources it ran under
+            tracer.instant("host_budget", pid=self.obs_pid,
+                           intra_op=self.host_budget.intra_op,
+                           cores=self.host_budget.cores,
+                           engines=self.host_budget.engines,
+                           source=self.host_budget.source)
 
     # ------------------------------------------------------ submission
 
@@ -113,6 +130,133 @@ class ContinuousEngine:
         toks = self.tok.encode(prompt) if isinstance(prompt, str) \
             else np.asarray(prompt, np.int32)
         return self.prefix_cache.match_len(toks)
+
+    # ------------------------------------------------------ pre-warm
+
+    def prewarm(self, buckets, batch_sizes=None) -> dict:
+        """Compile every (prompt_len, gen_len) × gang-batch × block
+        fused-decode variant this engine can hit under load, *before*
+        admission opens — so no request ever pays a first-block compile,
+        and concurrent engines never compile inside each other's decode
+        window (the PR 6 regression). ``buckets`` is an iterable of
+        ``(prompt_len, gen_len)`` shape buckets; ``batch_sizes``
+        defaults to every padded gang size admission or compaction can
+        produce (1..max_gang through ``_pad_batch``, plus raw 1 for
+        resumed single rows). Marks the compile ledger warm; any compile
+        after this is counted, logged, and exported as
+        ``repro_post_warm_compiles_total``."""
+        sched = self.scheduler
+        if batch_sizes:
+            sizes = sorted(set(batch_sizes))
+        else:
+            sizes = sorted({1} | {sched._pad_batch(n)
+                                  for n in range(1, sched.max_gang + 1)})
+        t0 = time.perf_counter()
+        before = sched.jit_cache_size()
+        for (P, gen_len) in buckets:
+            decoder = sched.decoder_for(gen_len)
+            # dummy prompts must not enter the radix store: detach it
+            # for the warmup (the n_hit=0 prefill path compiles the
+            # same chunk variants a store miss would)
+            store, decoder.prompt_cache = decoder.prompt_cache, None
+            try:
+                for B in sizes:
+                    # pass 1 exercises a FRESH pool buffer, pass 2 a
+                    # RECYCLED one (released by pass 1). The two can
+                    # carry spelling-distinct-but-equivalent shardings
+                    # (explicit out_shardings vs compiler-chosen output
+                    # spec), which the jit cache treats as different
+                    # variants — loop until the cache stops growing so
+                    # both families are compiled before admission.
+                    for _ in range(3):
+                        before_b = sched.jit_cache_size()
+                        with span(self.tracer, "prewarm",
+                                  pid=self.obs_pid, batch=B,
+                                  prompt_len=P, gen_len=gen_len):
+                            self._prewarm_one(decoder, P, gen_len, B)
+                        if sched.jit_cache_size() == before_b:
+                            break
+            finally:
+                decoder.prompt_cache = store
+        variants = sched.jit_cache_size() - before
+        wall = time.perf_counter() - t0
+        sched.compile_watch.mark_warm()
+        self.metrics.prewarmed = 1
+        self.metrics.compile_misses = sched.compile_watch.misses
+        self.metrics.compile_seconds = sched.compile_watch.seconds
+        return {"buckets": [list(b) for b in buckets],
+                "batch_sizes": sizes, "variants": variants,
+                "seconds": round(wall, 2)}
+
+    def _prewarm_one(self, decoder, P: int, gen_len: int, B: int) -> None:
+        sched = self.scheduler
+        watch = sched.compile_watch
+        prompts = np.full((B, P), 1, np.int32)
+        cache = None
+        if decoder.dcfg.method != "vanilla":
+            cache = watch.watched(
+                lambda: self.pool.acquire(B, P + gen_len),
+                sched.jit_cache_size, "prewarm_acquire",
+                tracer=self.tracer, pid=self.obs_pid)
+        state = watch.watched(
+            lambda: decoder.prefill(prompts, cache=cache),
+            sched.jit_cache_size, "prewarm_prefill",
+            tracer=self.tracer, pid=self.obs_pid)
+        while state.block_idx < state.n_blocks:
+            watch.watched(
+                lambda: decoder.decode_block(state),
+                sched.jit_cache_size, "prewarm_block",
+                tracer=self.tracer, pid=self.obs_pid)
+            # untrained/chatty params may emit EOS on dummy prompts;
+            # clearing done (a runtime array — same compiled fn) keeps
+            # every later block-index variant getting compiled too
+            state.done[:] = False
+        if state.cache is not None:
+            self.pool.release(B, P + gen_len, state.cache)
+            state.cache = None
+
+    # ------------------------------------------------------ stealing
+
+    def steal_waiting(self) -> Optional[ServeRequest]:
+        """Give up the newest waiting request to an idle sibling (see
+        ``BlockScheduler.steal_waiting``); closes this engine's
+        "request" span — the thief's re-submission opens a fresh one on
+        its own track with the same trace id."""
+        req = self.scheduler.steal_waiting()
+        if req is not None:
+            self._close_stolen_span(req)
+            self.metrics.steals_out += 1
+        return req
+
+    def steal_paused(self):
+        """Give up one host-portable parked row as ``(req, state)`` (or
+        None); same span discipline as ``steal_waiting``."""
+        out = self.scheduler.steal_paused()
+        if out is not None:
+            self._close_stolen_span(out[0])
+            self.metrics.steals_out += 1
+        return out
+
+    def _close_stolen_span(self, req: ServeRequest) -> None:
+        if self.tracer is not None and req.trace_id:
+            self.tracer.async_end(req.trace_id, "request",
+                                  pid=self.obs_pid, uid=req.uid,
+                                  stolen=True)
+
+    def adopt_paused(self, req: ServeRequest, state: DecodeState) -> int:
+        """Adopt a stolen mid-decode row: reopens the request's span
+        pair on this engine's track and parks it for the normal resume
+        path. Returns the fresh uid."""
+        self.metrics.steals_in += 1
+        t_ns = time.perf_counter_ns()
+        uid = self.scheduler.adopt_paused(req, state)
+        if self.tracer is not None and req.trace_id:
+            # "request" reopens just before the scheduler's "queue"
+            # span (explicit earlier timestamp keeps nesting sound)
+            self.tracer.async_begin(req.trace_id, "request",
+                                    pid=self.obs_pid, t_ns=t_ns,
+                                    uid=uid, stolen=True)
+        return uid
 
     def preempt(self, uid: int) -> None:
         self.scheduler.preempt(uid)
@@ -157,6 +301,12 @@ class ContinuousEngine:
         self.stats["time_s"] += dt
         self.metrics.queue_depth = len(self.scheduler.waiting)
         self.metrics.gang_merges = self.scheduler.merges
+        # mirror the compile ledger (single decode-thread writer)
+        watch = self.scheduler.compile_watch
+        self.metrics.compile_misses = watch.misses
+        self.metrics.compile_hits = watch.hits
+        self.metrics.compile_seconds = watch.seconds
+        self.metrics.post_warm_compiles = watch.post_warm
         if self.prefix_cache is not None:
             st = self.prefix_cache.stats()
             self.metrics.prefix_cache_bytes = st["bytes"]

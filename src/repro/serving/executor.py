@@ -122,3 +122,24 @@ class DecodeExecutor:
                          out_shardings=shardings)
             self._cache_fns[key] = fn
         return fn()
+
+    def constrain_cache(self, cache, batch: int, total_len: int):
+        """Pin a cache pytree to the canonical SpecBuilder sharding from
+        inside a jitted computation. The decode fns apply this to their
+        cache *outputs* so a recycled pool buffer carries exactly the
+        sharding a fresh ``init_cache`` buffer does — otherwise the jit
+        cache sees two sharding-distinct variants of every (batch,
+        block) shape and the second one compiles at serve time, after
+        pre-warm declared the engine warm."""
+        if cache is None or not jax.tree.leaves(cache):
+            return cache
+        shardings = self._shardings(self._sb.cache(batch, total_len))
+        return jax.tree.map(jax.lax.with_sharding_constraint,
+                            cache, shardings)
+
+    def jit_cache_size(self) -> int:
+        """Compiled cache-creation variants — counted alongside the
+        decoder's jit caches by the CompileWatch ledger, so a pool
+        acquire at a never-seen (batch, total_len) shows up as the
+        compile it is."""
+        return sum(fn._cache_size() for fn in self._cache_fns.values())

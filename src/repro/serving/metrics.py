@@ -68,6 +68,22 @@ class ServeMetrics:
     prefix_cache_evictions: int = 0    # chunks evicted (LRU, byte budget)
     prefix_cache_bytes: int = 0        # resident chunk KV bytes
     prefix_cache_nodes: int = 0        # resident chunks
+    # block-boundary work stealing (EngineRouter): requests this engine
+    # gave up to an idle sibling / adopted from a loaded one
+    steals_out: int = 0
+    steals_in: int = 0
+    # compile ledger (repro.obs.CompileWatch, mirrored each engine
+    # step): new jit variants built vs dispatches served warm, wall
+    # attributed to variant-building calls, and — after startup
+    # pre-warm — variants that should not exist
+    compile_misses: int = 0
+    compile_hits: int = 0
+    compile_seconds: float = 0.0
+    post_warm_compiles: int = 0
+    prewarmed: int = 0                 # 1 once Engine.prewarm() finished
+    # effective host budget (repro.launch.host): XLA:CPU intra-op pool
+    # threads this engine's dispatches may use (0 = unbudgeted)
+    host_threads: int = 0
     # decode thread writes / asyncio metrics reader snapshots
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
@@ -177,6 +193,16 @@ class ServeMetrics:
             "prefix_cache_evictions": self.prefix_cache_evictions,
             "prefix_cache_bytes": self.prefix_cache_bytes,
             "prefix_cache_nodes": self.prefix_cache_nodes,
+            "busy_time_s": self.busy_time_s,
+            "queue_wait_s": sum(r.queue_s for r in requests),
+            "steals_out": self.steals_out,
+            "steals_in": self.steals_in,
+            "compile_misses": self.compile_misses,
+            "compile_hits": self.compile_hits,
+            "compile_seconds": self.compile_seconds,
+            "post_warm_compiles": self.post_warm_compiles,
+            "prewarmed": self.prewarmed,
+            "host_threads": self.host_threads,
             "latency_p50_s": percentile(lat, 50),
             "latency_p99_s": percentile(lat, 99),
             "ttfb_p50_s": percentile(ttfb, 50),

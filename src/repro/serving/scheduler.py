@@ -47,6 +47,7 @@ from repro.cache.store import HOST_PLACEMENT
 from repro.core.decoder import (DecodeConfig, DecodeState, DiffusionDecoder,
                                 eos_truncate)
 from repro.models.config import ModelConfig
+from repro.obs.compile import CompileWatch
 from repro.obs.trace import span
 from repro.serving.pool import PrefixKVPool
 from repro.serving.types import BlockChunk, Completion, ServeRequest
@@ -198,6 +199,11 @@ class BlockScheduler:
         # | "paused") — the bookkeeping that keeps span trees balanced
         # through cancel/preempt/deadline paths
         self._span_state: Dict[int, str] = {}
+        # compile ledger: every jit-dispatching call site below runs
+        # through it so new compiled variants are attributed to the
+        # call that built them (and flagged if they appear after the
+        # startup pre-warm declared the engine warm)
+        self.compile_watch = CompileWatch()
 
     # ------------------------------------------------------ bookkeeping
 
@@ -208,6 +214,11 @@ class BlockScheduler:
                 self.cfg, self.params, d, mesh=self.mesh,
                 executor=self.executor, prompt_cache=self.prefix_cache)
         return self._decoders[gen_len]
+
+    def decoder_for(self, gen_len: int) -> DiffusionDecoder:
+        """Public accessor for the per-``gen_len`` decoder (the engine's
+        pre-warm drives it directly, outside the admission path)."""
+        return self._decoder(gen_len)
 
     def _pad_batch(self, n: int) -> int:
         """Gang-size policy: optional pow2 ladder, then round up to the
@@ -228,7 +239,13 @@ class BlockScheduler:
         return not (self.waiting or self.paused or self.gangs)
 
     def jit_cache_size(self) -> int:
-        return sum(d.jit_cache_size() for d in self._decoders.values())
+        """Compiled variants across every decoder *and* the executor's
+        cache-creation fns — the quantity whose growth the CompileWatch
+        ledger attributes to call sites."""
+        n = sum(d.jit_cache_size() for d in self._decoders.values())
+        if self.executor is not None:
+            n += self.executor.jit_cache_size()
+        return n
 
     # ------------------------------------------------------ submission
 
@@ -360,6 +377,57 @@ class BlockScheduler:
         if open_span in ("queue", "decode"):
             self.tracer.async_end(req.trace_id, open_span, pid=self.pid)
 
+    # ------------------------------------------------------ stealing
+
+    def steal_waiting(self) -> Optional[ServeRequest]:
+        """Give up the *newest* waiting request to an idle sibling
+        engine (EngineRouter block-boundary work stealing). Newest
+        first: the head of the queue is next in line for this engine's
+        own backfill, while the tail would wait longest here. Closes
+        the request's "queue" span on this engine's track — the thief
+        opens a fresh one when it re-admits."""
+        if not self.waiting:
+            return None
+        req = self.waiting.pop()
+        if self.tracer is not None and req.trace_id \
+                and self._span_state.pop(req.uid, None) == "queue":
+            self.tracer.async_end(req.trace_id, "queue", pid=self.pid,
+                                  stolen=True)
+        return req
+
+    def steal_paused(self) -> Optional[Tuple[ServeRequest, DecodeState]]:
+        """Give up one parked (preempted) row, newest first. Only
+        host-portable states leave: a dkv state pins a gathered device
+        cache on this engine's mesh (and dkv is not batch-invariant
+        anyway), so dkv rows always resume where they paused."""
+        for item in reversed(self.paused):
+            req, state, decoder = item
+            if decoder.dcfg.method == "dkv" or state.cache is not None:
+                continue
+            self.paused.remove(item)
+            self._span_state.pop(req.uid, None)
+            if self.tracer is not None and req.trace_id:
+                self.tracer.instant("steal_out", pid=self.pid, uid=req.uid)
+            return req, state
+
+    def adopt_paused(self, req: ServeRequest, state: DecodeState) -> int:
+        """Adopt a mid-decode row stolen from a sibling engine: the
+        request gets a fresh uid in this scheduler's namespace (the
+        victim's uid could collide with a live one here) and parks on
+        the paused deque at the exact block it left off. The normal
+        resume path — pool buffer acquire plus radix-store re-prime
+        when the prefix cache is on — picks it up at the next
+        ``_admit``, so a stolen row decodes exactly like a row preempted
+        and resumed on one engine."""
+        self._uid += 1
+        req.uid = self._uid
+        if self.tracer is not None and req.trace_id:
+            self.tracer.async_begin(req.trace_id, "queue", pid=self.pid,
+                                    uid=req.uid, stolen=True)
+            self._span_state[req.uid] = "queue"
+        self.paused.append((req, state, self._decoder(req.gen_len)))
+        return req.uid
+
     # ------------------------------------------------------ merge
 
     def _merge_stragglers(self) -> None:
@@ -446,7 +514,10 @@ class BlockScheduler:
                 self.gangs.remove(g)
             cache = None
             if decoder.dcfg.method != "vanilla":
-                cache = self.pool.acquire(new_b, T)
+                cache = self.compile_watch.watched(
+                    lambda: self.pool.acquire(new_b, T),
+                    self.jit_cache_size, "merge_acquire",
+                    tracer=self.tracer, pid=self.pid)
             state = decoder.merge_rows(parts, cache=cache)
         self.gangs.append(Gang(decoder, state, reqs))
         self.merges += 1
@@ -464,9 +535,14 @@ class BlockScheduler:
         # the decode loop so occupancy isn't attributed post-compaction
         self.last_decoded_rows = self.live_rows
         for gang in self.gangs:
+            size0 = self.jit_cache_size()
             t0_ns = time.perf_counter_ns()
             gang.decoder.decode_block(gang.state)
             t1_ns = time.perf_counter_ns()
+            self.compile_watch.observe(
+                self.jit_cache_size() - size0, (t1_ns - t0_ns) / 1e9,
+                "decode_block", tracer=self.tracer, pid=self.pid,
+                t0_ns=t0_ns, t1_ns=t1_ns)
             self._drain_block_stats(gang, t0_ns, t1_ns)
             c, comp = self._harvest(gang, gang.state.nfe - gang.nfe_seen,
                                     gang.state.host_syncs - gang.syncs_seen,
@@ -516,12 +592,17 @@ class BlockScheduler:
         while self.paused and free > 0:
             req, state, decoder = self.paused.popleft()
             if state.cache is None and decoder.dcfg.method != "vanilla":
-                state.cache = self.pool.acquire(state.batch, state.total_len)
-                if decoder.dcfg.prefix_cache:
-                    # a parked state dropped its prompt KV; re-prime it
-                    # (its own chunks are usually still in the store,
-                    # so this is O(tail), not O(prompt))
-                    decoder.prime_prompt_kv(state)
+                def _resume(state=state, decoder=decoder):
+                    state.cache = self.pool.acquire(state.batch,
+                                                    state.total_len)
+                    if decoder.dcfg.prefix_cache:
+                        # a parked state dropped its prompt KV; re-prime
+                        # it (its own chunks are usually still in the
+                        # store, so this is O(tail), not O(prompt))
+                        decoder.prime_prompt_kv(state)
+                self.compile_watch.watched(
+                    _resume, self.jit_cache_size, "resume",
+                    tracer=self.tracer, pid=self.pid)
             if req.admit_time < 0:   # resume keeps the first admission
                 req.admit_time = time.perf_counter()
             self._trace_admit(req)
@@ -609,12 +690,17 @@ class BlockScheduler:
         prompts = np.stack(
             [r.prompt_tokens for r in batch_reqs]
             + [batch_reqs[0].prompt_tokens] * (padded - n)).astype(np.int32)
-        cache = None
-        if decoder.dcfg.method != "vanilla":
-            cache = self.pool.acquire(padded, P + gen_len)
-        with span(self.tracer, "prefill", pid=self.pid, batch=padded,
-                  prompt_len=P):
-            state = decoder.prefill(prompts, cache=cache)
+        def _build():
+            cache = None
+            if decoder.dcfg.method != "vanilla":
+                cache = self.pool.acquire(padded, P + gen_len)
+            with span(self.tracer, "prefill", pid=self.pid, batch=padded,
+                      prompt_len=P):
+                return decoder.prefill(prompts, cache=cache)
+
+        state = self.compile_watch.watched(
+            _build, self.jit_cache_size, "prefill",
+            tracer=self.tracer, pid=self.pid)
         now = time.perf_counter()
         for i, r in enumerate(batch_reqs):
             r.admit_time = now
@@ -753,7 +839,10 @@ class BlockScheduler:
                         # a state-carrying cache (prefix_cache prompt
                         # region) is gathered by take_rows itself; a
                         # pooled buffer would be dead weight
-                        cache = self.pool.acquire(new_b, T)
+                        cache = self.compile_watch.watched(
+                            lambda new_b=new_b: self.pool.acquire(new_b, T),
+                            self.jit_cache_size, "compact_acquire",
+                            tracer=self.tracer, pid=self.pid)
                     new_state = gang.decoder.take_rows(st, rows, cache=cache)
                     if st.cache is not None:
                         self.pool.release(st.batch, T, st.cache)

@@ -1,0 +1,190 @@
+"""Block-boundary work stealing (EngineRouter / EngineLoop / engine).
+
+The contract under test: a stolen request produces the SAME tokens it
+would have produced unstolen. Streaming decode is batch-invariant (the
+same discipline ``test_sharded_decode.py`` leans on), stolen waiting
+requests are re-prefilled from scratch by the thief, and stolen paused
+rows resume through the exact preempt/resume path — so token identity
+is exact, not approximate. On top of identity: cancellation races with
+the steal handoff (every ticket concludes exactly once), and the span
+discipline (victim closes "request"/"queue" with ``stolen=True``, the
+thief reopens both) keeps per-request trace trees well-formed.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.decoder import DecodeConfig
+from repro.models import get_config, init_params
+from repro.obs import Tracer
+from repro.obs.trace import request_tree
+from repro.server import EngineLoop, EngineRouter
+from repro.server.types import ServerRequest
+from repro.serving import ContinuousEngine
+
+CFG = get_config("tiny")
+PARAMS = init_params(CFG, jax.random.PRNGKey(3))
+MAX_TOKENS = 16
+# one shape bucket: equal-length prompts gang-batch cleanly
+PROMPTS = [f"Q:{i}{(i + 3) % 10}+{(i + 5) % 10}{i}=? A:" for i in range(8)]
+
+
+def make_engine(max_slots=2):
+    dcfg = DecodeConfig(method="streaming", gen_len=MAX_TOKENS,
+                        block_size=8, window=16)
+    return ContinuousEngine(CFG, PARAMS, dcfg, max_slots=max_slots)
+
+
+def reference_texts():
+    """Every prompt decoded on one engine, no stealing: prompt -> text."""
+    eng = make_engine(max_slots=2)
+    uids = {eng.submit(p, max_tokens=MAX_TOKENS): p for p in PROMPTS}
+    comps = eng.run_to_completion()
+    assert len(comps) == len(PROMPTS)
+    return {uids[c.uid]: c.text for c in comps}
+
+
+REF = None
+
+
+def _ref():
+    global REF
+    if REF is None:
+        REF = reference_texts()
+    return REF
+
+
+class Fleet:
+    """Two EngineLoops under one router, everything submitted to loop 0
+    so loop 1 has nothing to do but steal."""
+
+    def __init__(self, steal=True, tracer=None):
+        self.engines = [make_engine(max_slots=2) for _ in range(2)]
+        self.loops = [EngineLoop(e, max_pending=64, idle_poll_s=0.005,
+                                 tracer=tracer, index=i)
+                      for i, e in enumerate(self.engines)]
+        self.router = EngineRouter(self.loops, steal=steal)
+
+    def __enter__(self):
+        for lp in self.loops:
+            lp.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.router.close(drain=False, timeout_s=60)
+
+    def submit_all(self, prompts):
+        """Submit everything to the victim (loop 0) and return
+        per-ticket (ticket, done_event, results_list) records."""
+        out = []
+        for p in prompts:
+            done = threading.Event()
+            results = []
+
+            def deliver(event, results=results, done=done):
+                results.append(event)
+                if event[0] == "done":
+                    done.set()
+
+            t = self.loops[0].submit(
+                ServerRequest(prompt=p, max_tokens=MAX_TOKENS), deliver)
+            t.loop = self.loops[0]
+            out.append((p, t, done, results))
+        return out
+
+
+def test_stolen_tokens_bit_identical():
+    ref = _ref()
+    with Fleet(steal=True) as fl:
+        recs = fl.submit_all(PROMPTS)
+        for p, t, done, results in recs:
+            assert done.wait(timeout=180), f"request never finished: {p}"
+        # the idle sibling must actually have taken work...
+        assert fl.engines[1].metrics.steals_in >= 1
+        total = sum(e.metrics.steals_in for e in fl.engines)
+        assert total == sum(e.metrics.steals_out for e in fl.engines)
+        # ...and every request — stolen or not — matches the unstolen run
+        for p, t, done, results in recs:
+            comp = results[-1][1]
+            assert results[-1][0] == "done"
+            assert not comp.cancelled
+            assert comp.text == ref[p], f"steal changed tokens for {p!r}"
+
+
+def test_steal_under_cancel_concludes_every_ticket_once():
+    tracer = Tracer()
+    with Fleet(steal=True, tracer=tracer) as fl:
+        recs = fl.submit_all(PROMPTS)
+        # cancel every other ticket immediately: some are still pending
+        # on the victim, some already stolen (the cancel must forward to
+        # the ticket's current owner), some decoding
+        for p, t, done, results in recs[::2]:
+            fl.router.cancel(t, "test-cancel")
+        for p, t, done, results in recs:
+            assert done.wait(timeout=180), f"request never concluded: {p}"
+        for p, t, done, results in recs:
+            dones = [e for e in results if e[0] == "done"]
+            assert len(dones) == 1, f"{p!r} concluded {len(dones)} times"
+        # span trees stay well-formed across the steal/cancel races:
+        # request_tree raises on unbalanced or unclosed nesting. A
+        # ticket cancelled before reaching any engine opened no spans —
+        # zero events is correct for it, malformed nesting never is.
+        traced = 0
+        for p, t, done, results in recs:
+            events = tracer.request_events(t.trace_id) if t.trace_id \
+                else []
+            if events:
+                request_tree(events)
+                traced += 1
+        assert traced >= 1
+
+
+def test_paused_row_steal_resumes_identically():
+    """Deterministic engine-level lifecycle: decode one block, preempt,
+    steal the parked row, adopt it on a second engine, finish there —
+    and get exactly the tokens an unbroken single-engine run yields."""
+    ref = _ref()
+    victim = make_engine(max_slots=1)
+    thief = make_engine(max_slots=1)
+    target = PROMPTS[0]
+
+    uid = victim.submit(target, max_tokens=MAX_TOKENS)
+    assert victim.step() == []            # prefill + block 0 of 2
+    victim.preempt(uid)
+    # Admission resumes paused rows first, so inside a full tick a
+    # compacting-method row parks and immediately un-parks — the parked
+    # state is observable only at the block boundary itself. Run the
+    # scheduler's own compaction step (the first half of that boundary)
+    # to freeze the instant a loop-level steal command would see.
+    victim.scheduler._compact()
+    assert any(r.uid == uid for r, _, _ in victim.scheduler.paused)
+
+    stolen = victim.steal_paused()
+    assert stolen is not None
+    req, state = stolen
+    assert req.uid == uid and state.cache is None   # host-portable
+    assert victim.metrics.steals_out == 1
+    assert not victim.scheduler.paused
+
+    new_uid = thief.adopt_paused(req, state)
+    assert thief.metrics.steals_in == 1
+    comps = {c.uid: c for c in thief.run_to_completion()}
+    assert comps[new_uid].text == ref[target]
+    assert victim.run_to_completion() == []          # nothing left behind
+
+
+def test_dkv_paused_rows_are_never_stolen():
+    """dkv parked rows pin a device cache (and the method is not
+    batch-invariant) — steal_paused must refuse them."""
+    dcfg = DecodeConfig(method="dkv", gen_len=MAX_TOKENS, block_size=8)
+    eng = ContinuousEngine(CFG, PARAMS, dcfg, max_slots=1)
+    uid = eng.submit(PROMPTS[0], max_tokens=MAX_TOKENS)
+    eng.step()
+    eng.preempt(uid)
+    eng.scheduler._compact()              # freeze the parked instant
+    assert eng.scheduler.paused
+    assert eng.steal_paused() is None
+    assert eng.metrics.steals_out == 0
+    eng.run_to_completion()
