@@ -1,0 +1,170 @@
+"""Benchmark regression gate: compare fresh ``BENCH_*.json`` results
+against the committed baseline with per-metric tolerances.
+
+    PYTHONPATH=src python scripts/bench_gate.py \
+        --fresh results/gate_fresh [--baseline git:HEAD] \
+        [--out results/GATE.json]
+
+``--baseline`` is either a directory of baseline JSON files or
+``git:REF`` (the default, ``git:HEAD``), which reads each baseline
+from ``REF:results/<name>`` — so a regenerated-but-uncommitted
+``results/`` tree never silently self-compares.
+
+Every fresh file is matched to its same-named baseline, both documents
+are walked recursively, and each leaf whose key appears in the RULES
+table is checked:
+
+    min_ratio r   fresh >= baseline * r      (throughput floors)
+    max_ratio r   fresh <= baseline * r      (latency ceilings)
+    exact         fresh == baseline          (structural invariants)
+    true          fresh is truthy            (self-asserted gates;
+                                              baseline value ignored)
+
+Perf tolerances are deliberately loose (CI hosts jitter hard); the
+teeth are the exact/true rules — ``host_syncs_per_block`` and the
+benches' own ``within_tolerance`` verdicts, which embed the tight 5%
+overhead checks measured off/on within one process. Output is
+machine-readable JSON ({"pass": bool, "checks": [...]}) plus a
+human summary; exit status 0 iff every check passed.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import glob
+import json
+import os
+import subprocess
+import sys
+
+# (metric key, rule, argument). The key matches any JSON object key at
+# any depth whose value is a leaf (number/bool); the first matching
+# rule wins, later entries never fire for that key.
+RULES = [
+    ("host_syncs_per_block", "exact", None),
+    ("host_syncs_per_block_unchanged", "true", None),
+    ("within_tolerance", "true", None),
+    ("recompiled_after_warmup", "exact", None),
+    ("audits_completed", "min_ratio", 1.0),   # never fewer than baseline
+    ("audit_errors", "exact", None),
+    ("tracer_dropped", "exact", None),
+    ("throughput_tok_s", "min_ratio", 0.5),
+    ("goodput_tok_s", "min_ratio", 0.5),
+    ("ttfb_p50_s", "max_ratio", 2.0),
+    ("ttfb_p99_s", "max_ratio", 3.0),
+    ("latency_p50_s", "max_ratio", 2.0),
+    ("latency_p99_s", "max_ratio", 3.0),
+]
+
+
+def leaves(doc, prefix=""):
+    """(dotted.path, key, value) for every scalar leaf."""
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            yield from leaves(v, f"{prefix}{k}.")
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            yield from leaves(v, f"{prefix}{i}.")
+    else:
+        path = prefix.rstrip(".")
+        yield path, path.rsplit(".", 1)[-1], doc
+
+
+def rule_for(key):
+    for name, rule, arg in RULES:
+        if fnmatch.fnmatch(key, name):
+            return rule, arg
+    return None, None
+
+
+def check_pair(name, fresh_doc, base_doc):
+    base = {p: v for p, _, v in leaves(base_doc)}
+    out = []
+    for path, key, v in leaves(fresh_doc):
+        rule, arg = rule_for(key)
+        if rule is None or not isinstance(v, (int, float, bool)):
+            continue
+        b = base.get(path)
+        if rule == "true":
+            ok = bool(v)
+        elif b is None or not isinstance(b, (int, float, bool)):
+            continue                   # new metric: nothing to gate on
+        elif rule == "exact":
+            ok = v == b
+        elif rule == "min_ratio":
+            ok = v >= b * arg
+        else:                          # max_ratio
+            ok = v <= b * arg
+        out.append({"file": name, "path": path, "rule": rule,
+                    "arg": arg, "baseline": b, "fresh": v, "ok": ok})
+    return out
+
+
+def load_baseline(spec, name):
+    if spec.startswith("git:"):
+        ref = spec[len("git:"):] or "HEAD"
+        try:
+            blob = subprocess.run(
+                ["git", "show", f"{ref}:results/{name}"],
+                capture_output=True, check=True).stdout
+        except subprocess.CalledProcessError:
+            return None                # not committed at that ref
+        return json.loads(blob)
+    path = os.path.join(spec, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory of freshly generated BENCH_*.json")
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="baseline directory, or git:REF to read the "
+                         "committed results/ tree at REF")
+    ap.add_argument("--out", default="",
+                    help="write the machine-readable verdict here")
+    args = ap.parse_args()
+
+    fresh_files = sorted(glob.glob(os.path.join(args.fresh,
+                                                "BENCH_*.json")))
+    if not fresh_files:
+        print(f"bench_gate: no BENCH_*.json under {args.fresh}")
+        return 2
+    checks, skipped = [], []
+    for path in fresh_files:
+        name = os.path.basename(path)
+        with open(path) as f:
+            fresh_doc = json.load(f)
+        base_doc = load_baseline(args.baseline, name)
+        if base_doc is None:
+            skipped.append(name)
+            continue
+        checks.extend(check_pair(name, fresh_doc, base_doc))
+    verdict = {"pass": all(c["ok"] for c in checks) and bool(checks),
+               "baseline": args.baseline,
+               "files": [os.path.basename(p) for p in fresh_files],
+               "skipped_no_baseline": skipped,
+               "checks": checks}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(verdict, f, indent=2)
+    n_bad = sum(not c["ok"] for c in checks)
+    for c in checks:
+        if not c["ok"]:
+            print(f"FAIL {c['file']} {c['path']}: fresh={c['fresh']} "
+                  f"baseline={c['baseline']} rule={c['rule']} "
+                  f"arg={c['arg']}")
+    for name in skipped:
+        print(f"skip {name}: no baseline at {args.baseline}")
+    print(f"bench_gate: {len(checks) - n_bad}/{len(checks)} checks "
+          f"passed over {len(fresh_files) - len(skipped)} file(s) "
+          f"-> {'PASS' if verdict['pass'] else 'FAIL'}")
+    return 0 if verdict["pass"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

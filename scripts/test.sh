@@ -13,9 +13,16 @@
 #                                # a quick bench_cache run
 #   scripts/test.sh obs          # observability suite (tracer, span
 #                                # trees, telemetry, histograms, logs)
+#   scripts/test.sh audit        # quality-audit suite (shadow auditor,
+#                                # fault injection, SLO watchdog,
+#                                # flight recorder, /debug routes)
+#   scripts/test.sh gate         # regenerate the quick benches and
+#                                # gate them against the committed
+#                                # baseline (scripts/bench_gate.py)
 #   scripts/test.sh lint         # compileall + import-cycle smoke +
-#                                # no-print policy (also runs at the
-#                                # top of tier-1)
+#                                # no-print policy + raise discipline
+#                                # in observability hot paths (also
+#                                # runs at the top of tier-1)
 #   scripts/test.sh all          # suite + smoke
 #
 # Tests run on the single real CPU device; the dry-run subprocesses set
@@ -118,6 +125,37 @@ if bad:
 print("lint: XLA env (XLA_FLAGS/PJRT_NPROC/JAX_PLATFORMS) only "
       "mutated in repro.launch")
 EOF
+    python - <<'EOF'
+# observability hot paths must log-and-drop, never raise: a tracer or
+# auditor exception inside the decode thread would kill paying traffic
+# to report on it. AST lint: no `raise` statement in the tracer/auditor
+# modules outside the explicitly-allowlisted functions (request_tree is
+# an offline analysis helper whose ValueError IS its contract;
+# __post_init__ is config validation at construction time, before any
+# hot path exists).
+import ast, pathlib, sys
+FILES = ("src/repro/obs/trace.py", "src/repro/obs/audit.py")
+ALLOWED = {"request_tree", "__post_init__"}
+bad = []
+for fname in FILES:
+    tree = ast.parse(pathlib.Path(fname).read_text(), filename=fname)
+    # map every node to its innermost enclosing function name
+    def walk(node, fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = node.name
+        if isinstance(node, ast.Raise) and fn not in ALLOWED:
+            bad.append(f"{fname}:{node.lineno} (in {fn or '<module>'})")
+        for child in ast.iter_child_nodes(node):
+            walk(child, fn)
+    walk(tree, None)
+if bad:
+    print("lint: raise in an observability hot path (log-and-drop "
+          "instead; allowlist: request_tree, __post_init__):")
+    print("\n".join(f"  {b}" for b in bad))
+    sys.exit(1)
+print(f"lint: no raise outside {sorted(ALLOWED)} in "
+      f"{len(FILES)} obs hot-path modules")
+EOF
 }
 
 run_suite() {
@@ -164,6 +202,28 @@ run_obs() {
     python benchmarks/bench_obs.py --quick --out results/BENCH_obs_quick.json
 }
 
+run_audit() {
+    # quality-audit suite: shadow-auditor clean matrix + fault
+    # injection (flipped token, poisoned cache chunk), SLO watchdog,
+    # flight recorder, /debug/vars + /debug/flight
+    python -m pytest -x -q tests/test_audit.py
+}
+
+run_gate() {
+    # regenerate the quick benches into a scratch dir and gate them
+    # against the committed results/ tree (git:HEAD): perf within
+    # loose ratios, structural invariants (host_syncs_per_block, the
+    # benches' own within_tolerance verdicts) exact
+    local fresh="results/gate_fresh"
+    mkdir -p "$fresh"
+    python benchmarks/bench_obs.py --quick \
+        --out "$fresh/BENCH_obs_quick.json"
+    python benchmarks/bench_cache.py --quick \
+        --out "$fresh/BENCH_cache_quick.json"
+    python scripts/bench_gate.py --fresh "$fresh" --baseline git:HEAD \
+        --out results/GATE.json
+}
+
 run_server() {
     # loopback HTTP/SSE tests; also part of the tier-1 suite (the file
     # lives in tests/, so the plain pytest run picks it up too)
@@ -194,6 +254,8 @@ case "${1:-suite}" in
     sharded) run_sharded ;;
     cache)   run_cache ;;
     obs)     run_obs ;;
+    audit)   run_audit ;;
+    gate)    run_gate ;;
     lint)    run_lint ;;
     all)     run_suite; run_smoke ;;
     suite)   run_suite ;;

@@ -824,6 +824,13 @@ class DiffusionDecoder:
             # live at block start count (done rows' lanes are padding).
             counts = jnp.zeros((steps_cap,), jnp.int32)
             hist = jnp.zeros((CONF_BUCKETS,), jnp.int32)
+            # calibration accumulators (repro.obs.audit): per-lane
+            # commit-time confidence, plus the last step's confidence
+            # map so straggler fills record the value they were forced
+            # at. Carried through the while_loop and returned with the
+            # block's other outputs — same single host sync.
+            cconf = jnp.zeros((B, K), jnp.float32)
+            lconf = jnp.zeros((B, K), jnp.float32)
             live = ~done[:, None]
 
             def tally(counts, hist, step, commit, conf):
@@ -849,7 +856,7 @@ class DiffusionDecoder:
                     return loop_open(committed, step)
 
                 def body(c):
-                    x, committed, step, _, counts, hist = c
+                    x, committed, step, _, counts, hist, cconf, _ = c
                     out = apply_model(cfg, p, tokens=x, positions=pos_T,
                                       use_kernels=uk)
                     conf, toks = self._conf_from_logits(
@@ -857,11 +864,14 @@ class DiffusionDecoder:
                     x, committed, commit = commit_tokens(
                         x, committed, conf, toks, bstart)
                     counts, hist = tally(counts, hist, step, commit, conf)
-                    return (x, committed, step + 1, toks, counts, hist)
+                    cconf = jnp.where(commit, conf, cconf)
+                    return (x, committed, step + 1, toks, counts, hist,
+                            cconf, conf)
 
                 init = (x, committed, jnp.int32(0),
-                        jnp.zeros((B, K), jnp.int32), counts, hist)
-                x, committed, steps, toks, counts, hist = \
+                        jnp.zeros((B, K), jnp.int32), counts, hist,
+                        cconf, lconf)
+                x, committed, steps, toks, counts, hist, cconf, lconf = \
                     jax.lax.while_loop(cond, body, init)
 
             elif d.method == "dkv":
@@ -871,7 +881,7 @@ class DiffusionDecoder:
 
                 def body(c):
                     x, committed, step, _, cache, valid_mask, cached_mask, \
-                        vsums, counts, hist = c
+                        vsums, counts, hist, cconf, _ = c
                     q_toks = jnp.take_along_axis(x, qpos_b, axis=1)
                     mix = jnp.take_along_axis(cached_mask, qpos_b, axis=1)
                     out = apply_model(cfg, p, tokens=q_toks,
@@ -890,14 +900,18 @@ class DiffusionDecoder:
                     x, committed, commit = commit_tokens(
                         x, committed, conf, toks, bstart)
                     counts, hist = tally(counts, hist, step, commit, conf)
+                    cconf = jnp.where(commit, conf, cconf)
                     return (x, committed, step + 1, toks, out.cache,
-                            valid_mask, cached_mask, vsums, counts, hist)
+                            valid_mask, cached_mask, vsums, counts, hist,
+                            cconf, conf)
 
                 init = (x, committed, jnp.int32(0),
                         jnp.zeros((B, K), jnp.int32), cache,
-                        valid_mask, cached_mask, vsums, counts, hist)
+                        valid_mask, cached_mask, vsums, counts, hist,
+                        cconf, lconf)
                 (x, committed, steps, toks, cache, valid_mask, cached_mask,
-                 vsums, counts, hist) = jax.lax.while_loop(cond, body, init)
+                 vsums, counts, hist, cconf, lconf) = \
+                    jax.lax.while_loop(cond, body, init)
 
             else:
                 # prefix / fast / streaming: block-start refresh (paper
@@ -948,6 +962,8 @@ class DiffusionDecoder:
                 x, committed, commit = commit_tokens(x, committed, conf,
                                                      toks, bstart)
                 counts, hist = tally(counts, hist, 0, commit, conf)
+                cconf = jnp.where(commit, conf, cconf)
+                lconf = conf
 
                 if frozen:
                     bpos = jnp.broadcast_to(
@@ -959,7 +975,7 @@ class DiffusionDecoder:
                     return loop_open(committed, step)
 
                 def body(c):
-                    x, committed, step, _, counts, hist = c
+                    x, committed, step, _, counts, hist, cconf, _ = c
                     if frozen:
                         out = apply_model(cfg, p,
                                           tokens=x[:, bstart:bstart + K],
@@ -986,10 +1002,13 @@ class DiffusionDecoder:
                     x, committed, commit = commit_tokens(
                         x, committed, conf, toks, bstart)
                     counts, hist = tally(counts, hist, step, commit, conf)
-                    return (x, committed, step + 1, toks, counts, hist)
+                    cconf = jnp.where(commit, conf, cconf)
+                    return (x, committed, step + 1, toks, counts, hist,
+                            cconf, conf)
 
-                init = (x, committed, jnp.int32(1), toks, counts, hist)
-                x, committed, steps, toks, counts, hist = \
+                init = (x, committed, jnp.int32(1), toks, counts, hist,
+                        cconf, lconf)
+                x, committed, steps, toks, counts, hist, cconf, lconf = \
                     jax.lax.while_loop(cond, body, init)
 
             # straggler finalize (steps cap reached): commit the last
@@ -999,6 +1018,7 @@ class DiffusionDecoder:
             blk_masked = ~committed[:, bstart:bstart + K]
             fill = blk_masked & ~done[:, None] & (steps > 0)
             fill_n = jnp.sum(fill.astype(jnp.int32))
+            cconf = jnp.where(fill, lconf, cconf)
             blk = jnp.where(fill, toks, blk)
             x = x.at[:, bstart:bstart + K].set(blk)
             committed = committed.at[:, bstart:bstart + K].set(True)
@@ -1018,7 +1038,8 @@ class DiffusionDecoder:
                 cache = self.executor.constrain_cache(
                     cache, x.shape[0], x.shape[1])
             return (x, committed, done, steps, n_hit, cache,
-                    valid_mask, cached_mask, vsums, counts, hist, fill_n)
+                    valid_mask, cached_mask, vsums, counts, hist, fill_n,
+                    cconf)
 
         # The fused fn consumes and rewrites the whole cache for every
         # cached method, so its input buffer is dead on entry — donate
@@ -1053,7 +1074,7 @@ class DiffusionDecoder:
         cm = None if state.cached_mask is None \
             else self._put_batch(state.cached_mask)
         (x, committed, done, steps, n_hit, cache, vm, cm,
-         vsums, counts, hist, fill_n) = self._fused_fn()(
+         vsums, counts, hist, fill_n, cconf) = self._fused_fn()(
             self.params, self._put_batch(state.x),
             self._put_batch(state.committed), self._put_batch(state.done),
             state.cache, self._put_batch(qpos_b),
@@ -1107,7 +1128,8 @@ class DiffusionDecoder:
             committed_per_step=[int(v) for v in counts[:steps]],
             straggler_fill=int(fill_n),
             conf_hist=[int(v) for v in hist],
-            window=Sq, early_exits=n_hit, wall_s=wall))
+            window=Sq, early_exits=n_hit, wall_s=wall,
+            commit_conf=np.asarray(cconf, np.float32)))
         state.decode_time += wall
         return state
 
@@ -1146,6 +1168,9 @@ class DiffusionDecoder:
         live_rows = int((~done).sum())
         committed_per_step: list = []
         conf_hist = np.zeros((CONF_BUCKETS,), np.int64)
+        # calibration mirror of the fused loop's cconf/lconf carry
+        cconf = np.zeros((B, K), np.float32)
+        last_conf = None
         while step < steps_cap:
             blk_masked = ~committed[:, bstart:bend]
             if not (blk_masked & ~done[:, None]).any():
@@ -1292,6 +1317,8 @@ class DiffusionDecoder:
                     jnp.asarray(conf), jnp.asarray(blk_masked), n_commit))
             sel = np.where(commit)
             x[sel[0], bstart + sel[1]] = toks[sel]
+            cconf[sel] = conf[sel]
+            last_conf = conf
             committed[:, bstart:bend] |= commit
             act = commit & live
             committed_per_step.append(int(act.sum()))
@@ -1307,6 +1334,8 @@ class DiffusionDecoder:
         straggler_fill = int(blk_masked.sum()) if step > 0 else 0
         if blk_masked.any() and toks is not None:
             x[:, bstart:bend] = np.where(blk_masked, toks, x[:, bstart:bend])
+            if last_conf is not None:
+                cconf = np.where(blk_masked, last_conf, cconf)
         committed[:, bstart:bend] = True
         # Early exit (paper S3.3): a block that decoded an EOS makes
         # all *subsequent* blocks skippable for that row.
@@ -1332,7 +1361,8 @@ class DiffusionDecoder:
             committed_per_step=committed_per_step,
             straggler_fill=straggler_fill,
             conf_hist=[int(v) for v in conf_hist],
-            window=Sq, early_exits=hits_blk, wall_s=wall))
+            window=Sq, early_exits=hits_blk, wall_s=wall,
+            commit_conf=cconf))
         state.decode_time += wall
         return state
 

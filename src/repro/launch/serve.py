@@ -22,6 +22,11 @@ Multi-engine hosts should also budget and pre-warm (repro.launch.host):
 
     ... --engines 2 --host-threads-per-engine 2 \
         --compile-cache-dir results/compile_cache --prewarm 16:32
+
+Quality auditing + post-mortems (repro.obs.audit, HTTP mode):
+
+    ... --http 8000 --audit-rate 0.05 --audit-oracle auto \
+        --flight-dir results/flight --slo-ttfb-p50-ms 500
 """
 from __future__ import annotations
 
@@ -131,6 +136,38 @@ def main():
                     help="record request span trees + decode timelines "
                          "and write Chrome-trace JSON (Perfetto-"
                          "loadable) into DIR on shutdown (HTTP mode)")
+    ap.add_argument("--trace-flush-s", type=float, default=0.0,
+                    metavar="S",
+                    help="with --trace-dir: also rewrite trace.json "
+                         "atomically every S seconds, so a crashed run "
+                         "keeps its trace up to the last flush")
+    ap.add_argument("--audit-rate", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="shadow-audit this fraction of completed "
+                         "requests: re-decode on a low-priority lane "
+                         "through the host-loop oracle and/or a cold "
+                         "(cache-bypass) path and compare tokens "
+                         "bit-for-bit (repro.obs.audit; 0 = off)")
+    ap.add_argument("--audit-oracle", default="auto",
+                    choices=["host", "cold", "both", "auto"],
+                    help="audit lanes: 'host' flips the fused loop, "
+                         "'cold' bypasses the prefix cache, 'both' runs "
+                         "each, 'auto' picks every lane the engine "
+                         "config supports")
+    ap.add_argument("--flight-dir", default="", metavar="DIR",
+                    help="flight recorder: on SLO breach, audit "
+                         "divergence, crash, or GET /debug/flight, dump "
+                         "trace ring buffers + metrics snapshot + "
+                         "scheduler/gang state under DIR")
+    ap.add_argument("--slo-ttfb-p50-ms", type=float, default=0.0,
+                    help="SLO watchdog: rolling TTFB p50 target in ms "
+                         "(breach dumps a flight recording; 0 = off)")
+    ap.add_argument("--slo-token-latency-ms", type=float, default=0.0,
+                    help="SLO watchdog: rolling per-token latency p50 "
+                         "target in ms (0 = off)")
+    ap.add_argument("--slo-goodput-tok-s", type=float, default=0.0,
+                    help="SLO watchdog: rolling completed-tokens/s "
+                         "floor (0 = off)")
     ap.add_argument("--profile-blocks", type=int, default=0, metavar="N",
                     help="capture a jax.profiler trace over the first "
                          "N decoded blocks (written under --trace-dir, "
@@ -156,6 +193,24 @@ def main():
     if args.prefix_cache and args.method == "vanilla":
         raise SystemExit("--prefix-cache has no effect with --method "
                          "vanilla (no KV cache to reuse)")
+    slo_targets = {"ttfb_p50_s": args.slo_ttfb_p50_ms / 1e3,
+                   "token_latency_s": args.slo_token_latency_ms / 1e3,
+                   "goodput_tok_s": args.slo_goodput_tok_s}
+    if not args.http:
+        for flag, on in (("--audit-rate", args.audit_rate > 0),
+                         ("--flight-dir", bool(args.flight_dir)),
+                         ("--slo-*", any(slo_targets.values())),
+                         ("--trace-flush-s", args.trace_flush_s > 0)):
+            if on:
+                raise SystemExit(f"{flag} needs --http (the audit/SLO/"
+                                 "flight layer rides the HTTP serving "
+                                 "loop)")
+    if not 0.0 <= args.audit_rate <= 1.0:
+        raise SystemExit(f"--audit-rate wants [0, 1], got "
+                         f"{args.audit_rate}")
+    if args.trace_flush_s > 0 and not args.trace_dir:
+        raise SystemExit("--trace-flush-s needs --trace-dir (it "
+                         "rewrites DIR/trace.json periodically)")
     mesh_dims = _parse_mesh(args.mesh) if args.mesh else None
     prewarm_buckets = _parse_prewarm(args.prewarm) if args.prewarm else []
 
@@ -273,12 +328,35 @@ def main():
         engines = [make_engine(ex) for ex in executors]
         attach_profiler(engines[0])
         prewarm_all(engines)
+        audit = None
+        if args.audit_rate > 0:
+            from repro.obs import AuditConfig
+            audit = AuditConfig(sample_rate=args.audit_rate,
+                                oracle=args.audit_oracle)
+        watchdog = None
+        if any(slo_targets.values()):
+            from repro.obs import SLOWatchdog
+            watchdog = SLOWatchdog(
+                **{k: (v or None) for k, v in slo_targets.items()})
+        flight = None
+        if args.flight_dir:
+            from repro.obs import FlightRecorder
+            flight = FlightRecorder(args.flight_dir, tracer=tracer)
+        flusher = None
+        if tracer is not None and args.trace_flush_s > 0:
+            from repro.obs import TraceFlusher
+            flusher = TraceFlusher(
+                tracer, os.path.join(args.trace_dir, "trace.json"),
+                interval_s=args.trace_flush_s).start()
         try:
             run_http(engines if len(engines) > 1 else engines[0],
                      host=args.http_host, port=args.http,
                      max_pending=args.max_pending, tracer=tracer,
-                     steal=not args.no_steal)
+                     steal=not args.no_steal, audit=audit,
+                     watchdog=watchdog, flight=flight)
         finally:
+            if flusher is not None:
+                flusher.stop(final_flush=False)
             export_trace()
         return
     ds = ArithmeticDataset(tok, seq_len=44)

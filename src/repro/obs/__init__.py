@@ -20,12 +20,21 @@ Layering (threaded through every serving layer):
                  fields (``--log-level`` / ``--log-json``).
     profiler   — ``jax.profiler`` start/stop around the first N decoded
                  blocks (``--profile-blocks N``).
+    audit      — online quality auditing: shadow-oracle re-decode of
+                 sampled completions (host-loop and cache-bypass
+                 lanes, divergences classified by source and attributed
+                 to their block), confidence-calibration/early-exit-
+                 regret counters, rolling SLO watchdog, and a
+                 flight-recorder post-mortem dump
+                 (``--flight-dir`` / ``GET /debug/flight``).
 
 Everything is optional: a ``tracer=None`` (the default everywhere)
 costs one ``is None`` test per call site, and telemetry rides inside
 the already-compiled fused loop, so ``host_syncs_per_block`` is
 unchanged with observability on.
 """
+from repro.obs.audit import (AuditConfig, AuditResult, FlightRecorder,
+                             ShadowAuditor, SLOWatchdog)
 from repro.obs.compile import (CompileWatch, persistent_cache_counters,
                                watch_persistent_cache)
 from repro.obs.log import get_logger, setup_logging
@@ -33,11 +42,14 @@ from repro.obs.metrics import Histogram, device_memory_stats
 from repro.obs.profiler import BlockProfiler
 from repro.obs.telemetry import (CONF_BUCKETS, BlockStats,
                                  TelemetryAggregator)
-from repro.obs.trace import Tracer, span
+from repro.obs.trace import Tracer, TraceFlusher, span
 
 __all__ = [
-    "Tracer", "span", "BlockStats", "TelemetryAggregator", "CONF_BUCKETS",
+    "Tracer", "TraceFlusher", "span", "BlockStats", "TelemetryAggregator",
+    "CONF_BUCKETS",
     "Histogram", "device_memory_stats", "BlockProfiler",
     "CompileWatch", "watch_persistent_cache", "persistent_cache_counters",
     "get_logger", "setup_logging",
+    "AuditConfig", "AuditResult", "ShadowAuditor", "SLOWatchdog",
+    "FlightRecorder",
 ]

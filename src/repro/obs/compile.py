@@ -52,6 +52,12 @@ class CompileWatch:
     def mark_warm(self) -> None:
         self.warm = True
 
+    def counters(self) -> dict:
+        """JSON-safe ledger snapshot (debug_state / flight dumps)."""
+        return {"misses": self.misses, "hits": self.hits,
+                "seconds": self.seconds, "warm": self.warm,
+                "post_warm": self.post_warm}
+
     def watched(self, thunk: Callable, sizer: Callable[[], int],
                 what: str, tracer=None, pid: int = 0):
         """Run ``thunk``; attribute any jit-cache growth (measured via

@@ -55,6 +55,14 @@ class BlockStats:
     window: int                   # suffix/query window Sq
     early_exits: int              # rows that early-exited this block
     wall_s: float                 # host wall time of the block call
+    # (B, block_size) float32: the confidence each lane's token carried
+    # when it was committed (straggler fills record the last step's
+    # confidence). Rides the same host sync as the token buffer; the
+    # shadow auditor (repro.obs.audit) joins it per-request against the
+    # oracle re-decode to calibrate Eq. 4 confidence buckets. Not
+    # aggregated by _Agg — the per-request slices are consumed by the
+    # scheduler harvest and dropped here.
+    commit_conf: object = None
 
     @property
     def tokens_committed(self) -> int:

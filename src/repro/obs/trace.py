@@ -200,13 +200,59 @@ class Tracer:
         return {"traceEvents": self.events(), "displayTimeUnit": "ms"}
 
     def export(self, path: str) -> str:
-        """Write Chrome-trace JSON; returns the path written."""
+        """Write Chrome-trace JSON atomically (tmp + rename, so a
+        reader or a crash mid-write never sees a torn file); returns
+        the path written."""
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
             json.dump(self.to_chrome(), f)
+        os.replace(tmp, path)
         return path
+
+
+class TraceFlusher:
+    """Periodic Chrome-trace export on a daemon thread, so a crashed or
+    killed run keeps its trace up to the last flush instead of losing
+    everything to an export that only ran at graceful shutdown. Each
+    flush rewrites ``path`` atomically (``Tracer.export``); a failed
+    flush is logged-and-dropped, never raised into the process."""
+
+    def __init__(self, tracer: "Tracer", path: str,
+                 interval_s: float = 30.0):
+        self.tracer = tracer
+        self.path = path
+        self.interval_s = interval_s
+        self.flushes = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="repro-trace-flush")
+
+    def start(self) -> "TraceFlusher":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        from repro.obs.log import get_logger
+        log = get_logger(__name__)
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.tracer.export(self.path)
+                self.flushes += 1
+            except Exception:
+                log.exception("periodic trace flush failed")
+
+    def stop(self, final_flush: bool = True) -> None:
+        """Stop the thread; by default write one last (complete)
+        export."""
+        self._stop.set()
+        if self._thread.is_alive():
+            self._thread.join(max(self.interval_s, 1.0))
+        if final_flush:
+            self.tracer.export(self.path)
+            self.flushes += 1
 
 
 def request_tree(events: List[dict]):

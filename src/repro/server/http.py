@@ -8,6 +8,13 @@ Routes:
                            and a ``[DONE]`` sentinel.
     GET  /healthz          liveness + drain state + queue depth.
     GET  /metrics          Prometheus text format from ``ServeMetrics``.
+    GET  /debug/vars       live per-engine state as JSON: queue depths,
+                           in-flight gangs, steal/compile/audit counters
+                           (operator inspection without scraping the
+                           Prometheus text).
+    GET  /debug/flight     trigger a flight-recorder dump (trace ring
+                           buffers + metrics + scheduler state); 503
+                           when no ``--flight-dir`` is configured.
 
 Request lifecycle guarantees:
 * admission is bounded — a full queue answers ``429`` with
@@ -49,7 +56,7 @@ class HttpFrontend:
 
     def __init__(self, engine_loop, host: str = "127.0.0.1",
                  port: int = 8000, request_timeout_s: float = 10.0,
-                 tracer=None):
+                 tracer=None, flight=None, watchdog=None):
         self.loop = engine_loop                       # loop OR router
         self.engines = getattr(engine_loop, "engines",
                                None) or [engine_loop.engine]
@@ -58,6 +65,11 @@ class HttpFrontend:
         self.port = port
         self.request_timeout_s = request_timeout_s   # header-read budget
         self.tracer = tracer
+        # quality auditing (repro.obs.audit): the FlightRecorder backs
+        # GET /debug/flight; the SLOWatchdog feeds repro_slo_* metrics
+        # (both usually wired by _front / launch.serve)
+        self.flight = flight
+        self.watchdog = watchdog
         self._server: Optional[asyncio.AbstractServer] = None
         self._conns: set = set()
         self._draining = False
@@ -170,6 +182,28 @@ class HttpFrontend:
                 writer.write(wire.response(
                     200, self._metrics_text(),
                     content_type="text/plain; version=0.0.4",
+                    keep_alive=keep))
+        elif req.path == "/debug/vars":
+            if req.method != "GET":
+                writer.write(wire.error_response(405, "use GET",
+                                                 keep_alive=keep))
+            else:
+                writer.write(wire.response(200, self._debug_vars(),
+                                           keep_alive=keep))
+        elif req.path == "/debug/flight":
+            if req.method != "GET":
+                writer.write(wire.error_response(405, "use GET",
+                                                 keep_alive=keep))
+            elif self.flight is None:
+                writer.write(wire.error_response(
+                    503, "no flight recorder (start with --flight-dir)",
+                    keep_alive=keep))
+            else:
+                path = await asyncio.to_thread(
+                    self.flight.dump, "manual", True)
+                writer.write(wire.response(
+                    200, {"path": path, "dumps": self.flight.dumps,
+                          "suppressed": self.flight.suppressed},
                     keep_alive=keep))
         elif req.path == "/v1/completions":
             if req.method != "POST":
@@ -374,6 +408,23 @@ class HttpFrontend:
                 "live_rows": sum(s.live_rows for s in scheds),
                 "idle": all(s.idle for s in scheds)}
 
+    def _debug_vars(self) -> dict:
+        """Live engine state for operators: one row per EngineLoop
+        (queue depths, in-flight gangs, steal/compile/audit counters).
+        Cross-thread reads — one tick stale at worst, never torn."""
+        loops = getattr(self.loop, "loops", None) or [self.loop]
+        doc = {"status": "draining" if self._draining else "ok",
+               "engines": [lp.debug_vars() for lp in loops]}
+        if self.watchdog is not None:
+            doc["slo"] = self.watchdog.current()
+        if self.flight is not None:
+            doc["flight"] = {"dumps": self.flight.dumps,
+                             "suppressed": self.flight.suppressed,
+                             "dir": self.flight.flight_dir}
+        if self.tracer is not None:
+            doc["trace_drops"] = self.tracer.dropped
+        return doc
+
     def _metrics_text(self) -> str:
         """Prometheus text. Top-level series aggregate over every
         engine (sums; occupancy wall-time-weighted; quantiles pooled
@@ -532,8 +583,78 @@ class HttpFrontend:
                     out.append(f'repro_device_{key}{{device="{dev}"}} '
                                f"{int(v)}")
         if self.tracer is not None:
-            emit("repro_trace_dropped_total", self.tracer.dropped,
+            emit("repro_trace_drops_total", self.tracer.dropped,
                  "counter", "Trace events evicted from full rings.")
+        # shadow-audit counters (repro.obs.audit) — emitted whenever any
+        # engine carries an auditor
+        auditors = [e.auditor for e in self.engines
+                    if getattr(e, "auditor", None) is not None]
+        if auditors:
+            stats = [a.stats() for a in auditors]
+
+            def atot(key):
+                return sum(s[key] for s in stats)
+
+            emit("repro_audit_sampled_total", atot("sampled"), "counter",
+                 "Completions sampled for shadow re-decode.")
+            emit("repro_audit_completed_total", atot("completed"),
+                 "counter", "Shadow audits finished (all lanes).")
+            emit("repro_audit_dropped_total", atot("dropped"), "counter",
+                 "Audit jobs dropped at the bounded backlog.")
+            emit("repro_audit_errors_total", atot("errors"), "counter",
+                 "Audit attempts that failed internally (logged and "
+                 "dropped).")
+            emit("repro_audit_backlog", atot("backlog"), "gauge",
+                 "Audit jobs queued or in flight.")
+            emit("repro_audit_regret_total", atot("regret"), "counter",
+                 "Early-exited requests whose shadow audit diverged "
+                 "(the EOS that truncated the schedule was wrong).")
+            out.append("# HELP repro_audit_divergences_total Token "
+                       "divergences found by shadow audits, by source "
+                       "(dkv-structural is the documented non-batch-"
+                       "invariant contract, not a defect).")
+            out.append("# TYPE repro_audit_divergences_total counter")
+            from repro.obs.audit import SOURCES
+            for src in SOURCES:
+                n = sum(s["divergences"].get(src, 0) for s in stats)
+                out.append("repro_audit_divergences_total"
+                           f'{{source="{src}"}} {n}')
+            n_b = len(stats[0]["conf_agree"])
+            for name, key, help_text in (
+                    ("repro_audit_conf_agree_total", "conf_agree",
+                     "Audited tokens agreeing with the oracle, by "
+                     "commit-confidence bucket (Eq. 4 calibration)."),
+                    ("repro_audit_conf_tokens_total", "conf_total",
+                     "Audited tokens by commit-confidence bucket.")):
+                out.append(f"# HELP {name} {help_text}")
+                out.append(f"# TYPE {name} counter")
+                for i in range(n_b):
+                    lo, hi = i / n_b, (i + 1) / n_b
+                    n = sum(s[key][i] for s in stats)
+                    out.append(f'{name}{{bucket="{lo:.1f}-{hi:.1f}"}} {n}')
+        # SLO watchdog gauges/counters (repro_slo_*)
+        if self.watchdog is not None and self.watchdog.enabled:
+            slo = self.watchdog.current()
+            for fam, rows, mtype, help_text in (
+                    ("repro_slo_target", slo["targets"], "gauge",
+                     "Configured SLO target per objective."),
+                    ("repro_slo_value", slo["values"], "gauge",
+                     "Rolling-window observed value per objective."),
+                    ("repro_slo_breached", slo["breached"], "gauge",
+                     "1 while the objective is currently out of SLO."),
+                    ("repro_slo_breaches_total", slo["breaches_total"],
+                     "counter", "Breach onsets per objective.")):
+                if not rows:
+                    continue
+                out.append(f"# HELP {fam} {help_text}")
+                out.append(f"# TYPE {fam} {mtype}")
+                for obj, v in sorted(rows.items()):
+                    out.append(f'{fam}{{objective="{obj}"}} {v}')
+        if self.flight is not None:
+            emit("repro_flight_dumps_total", self.flight.dumps, "counter",
+                 "Flight-recorder dumps written.")
+            emit("repro_flight_suppressed_total", self.flight.suppressed,
+                 "counter", "Flight dumps suppressed by debounce/cap.")
         if len(self.engines) > 1:
             for name, key, mtype, help_text, fmt in (
                     ("requests_total", "requests", "counter",
@@ -588,14 +709,47 @@ class HttpFrontend:
         return "\n".join(out) + "\n"
 
 
-def _front(engines, max_pending: int, tracer=None, steal: bool = True):
+def _flight_state(loops, watchdog=None):
+    """State-provider closure body for the flight recorder: everything
+    a post-mortem needs, JSON-safe."""
+    engines = []
+    for lp in loops:
+        e = lp.engine
+        row = {"metrics": e.metrics.snapshot(),
+               "telemetry": e.telemetry.totals()}
+        if e.auditor is not None:
+            row["audit"] = e.auditor.stats()
+        engines.append(row)
+    state = {"engines": engines,
+             "schedulers": [lp.engine.scheduler.debug_state()
+                            for lp in loops],
+             "loops": [lp.debug_vars() for lp in loops]}
+    if watchdog is not None:
+        state["slo"] = watchdog.current()
+    return state
+
+
+def _front(engines, max_pending: int, tracer=None, steal: bool = True,
+           audit=None, watchdog=None, flight=None):
     """One EngineLoop per engine; >1 engine routes through
     ``EngineRouter`` (least-loaded by live rows, block-boundary work
     stealing unless ``steal=False``). ``tracer`` claims a named track
-    group per engine."""
+    group per engine. ``audit`` (an ``AuditConfig``) attaches a
+    ``ShadowAuditor`` per engine; ``watchdog``/``flight`` wire SLO
+    observation and crash/breach dumps into every loop."""
     engines = engines if isinstance(engines, (list, tuple)) else [engines]
     loops = [EngineLoop(e, max_pending=max_pending, tracer=tracer,
                         index=i) for i, e in enumerate(engines)]
+    if audit is not None:
+        from repro.obs.audit import ShadowAuditor
+        for e in engines:
+            e.attach_auditor(ShadowAuditor(e, audit, tracer=tracer,
+                                           flight=flight))
+    for lp in loops:
+        lp.watchdog = watchdog
+        lp.flight = flight
+    if flight is not None and flight.state_provider is None:
+        flight.state_provider = lambda: _flight_state(loops, watchdog)
     if len(loops) == 1:
         return loops[0]
     from repro.server.router import EngineRouter
@@ -603,17 +757,25 @@ def _front(engines, max_pending: int, tracer=None, steal: bool = True):
 
 
 async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
-                max_pending: int = 64, tracer=None,
-                steal: bool = True) -> None:
+                max_pending: int = 64, tracer=None, steal: bool = True,
+                audit=None, watchdog=None, flight=None) -> None:
     """Run the HTTP front end until cancelled, then drain gracefully.
     ``engine`` may be one ``ContinuousEngine`` or a list (one per
     device/mesh; requests are routed least-loaded and rebalanced by
-    work stealing unless ``steal=False``)."""
-    frontend = HttpFrontend(_front(engine, max_pending, tracer, steal),
-                            host=host, port=port, tracer=tracer)
+    work stealing unless ``steal=False``). ``audit``/``watchdog``/
+    ``flight`` enable the repro.obs.audit layer (see ``_front``)."""
+    if watchdog is not None and flight is not None \
+            and watchdog.flight is None:
+        watchdog.flight = flight
+    frontend = HttpFrontend(
+        _front(engine, max_pending, tracer, steal, audit=audit,
+               watchdog=watchdog, flight=flight),
+        host=host, port=port, tracer=tracer, flight=flight,
+        watchdog=watchdog)
     await frontend.start()
     log.info("repro.server listening on http://%s:%s (POST "
-             "/v1/completions, GET /healthz, GET /metrics; engines=%d)",
+             "/v1/completions, GET /healthz, GET /metrics, GET "
+             "/debug/vars, GET /debug/flight; engines=%d)",
              frontend.host, frontend.port, len(frontend.engines))
     try:
         await frontend.serve_forever()
@@ -624,10 +786,12 @@ async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
 
 
 def run(engine, host: str = "127.0.0.1", port: int = 8000,
-        max_pending: int = 64, tracer=None, steal: bool = True) -> None:
+        max_pending: int = 64, tracer=None, steal: bool = True,
+        audit=None, watchdog=None, flight=None) -> None:
     """Blocking entry point used by ``repro.launch.serve --http``."""
     try:
         asyncio.run(serve(engine, host, port, max_pending, tracer=tracer,
-                          steal=steal))
+                          steal=steal, audit=audit, watchdog=watchdog,
+                          flight=flight))
     except KeyboardInterrupt:
         pass

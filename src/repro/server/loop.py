@@ -105,6 +105,11 @@ class EngineLoop:
         # block-boundary work stealing (set by EngineRouter)
         self.router = None
         self.steal = False
+        # quality auditing / post-mortems (set by the front end):
+        # SLOWatchdog observes each completion; FlightRecorder is the
+        # dump sink for SLO breaches and decode-thread crashes
+        self.watchdog = None
+        self.flight = None
         self._steal_inflight = False        # one outstanding steal ask
         self._next_steal_t = 0.0            # backoff after an empty grant
         self._thread = threading.Thread(target=self._run, daemon=True,
@@ -121,6 +126,28 @@ class EngineLoop:
     @property
     def running(self) -> bool:
         return self._thread.is_alive()
+
+    def debug_vars(self) -> dict:
+        """Live JSON-safe state for ``GET /debug/vars`` and flight
+        dumps: front-end queue depths plus the scheduler's occupancy
+        snapshot and steal/compile/audit counters. Read from the
+        asyncio thread while the decode thread runs — values may be one
+        tick stale but never torn (GIL + list snapshots)."""
+        eng = self.engine
+        out = {
+            "index": self.index,
+            "running": self.running,
+            "inflight": self.inflight,
+            "pending": len(self._pending),
+            "live": len(self._live),
+            "max_pending": self.max_pending,
+            "steals_out": eng.metrics.steals_out,
+            "steals_in": eng.metrics.steals_in,
+            "scheduler": eng.scheduler.debug_state(),
+        }
+        if eng.auditor is not None:
+            out["audit"] = eng.auditor.stats()
+        return out
 
     def start(self) -> "EngineLoop":
         self._thread.start()
@@ -201,7 +228,8 @@ class EngineLoop:
             self.tracer.name_thread("decode", pid=eng.obs_pid)
         while True:
             busy = bool(self._pending or self._live
-                        or not eng.scheduler.idle)
+                        or not eng.scheduler.idle
+                        or eng.audit_pending)
             self._drain_commands(block=not busy)
             if self._stop.is_set():
                 if not self._drain_on_stop:
@@ -221,7 +249,14 @@ class EngineLoop:
                     # fail every in-flight request and keep accepting
                     log.exception("engine.step failed; failing in-flight "
                                   "requests")
+                    if self.flight is not None:
+                        self.flight.dump("crash")
                     self._cancel_all("error")
+            # audit lane: one decoder call per iteration, and only when
+            # the scheduler reports no waiting traffic (the auditor
+            # checks again itself) — paying requests always preempt it
+            # at the next block boundary
+            eng.audit_tick()
             eng.metrics.queue_depth = (len(self._pending)
                                        + len(eng.scheduler.waiting))
             if self._stop.is_set() and not self._drain_on_stop \
@@ -434,6 +469,8 @@ class EngineLoop:
 
     def _finish(self, comp: Completion) -> None:
         ticket = self._live.pop(comp.uid, None)
+        if self.watchdog is not None:
+            self.watchdog.observe(comp)
         if ticket is not None:
             self._conclude(ticket, comp)
 

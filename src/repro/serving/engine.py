@@ -76,6 +76,10 @@ class ContinuousEngine:
         # (repro.obs.profiler.BlockProfiler); ticked from step()
         self.profiler = None
         self._prof_blocks_seen = 0
+        # shadow auditor (repro.obs.audit): attached by the owning loop
+        # or front end; its counters mirror into metrics each step like
+        # the compile ledger
+        self.auditor = None
         if host_budget is not None:
             self.metrics.host_threads = host_budget.intra_op
 
@@ -316,6 +320,7 @@ class ContinuousEngine:
             blocks = self.telemetry.blocks
             self.profiler.tick(blocks - self._prof_blocks_seen)
             self._prof_blocks_seen = blocks
+        self._mirror_audit()
         return completions
 
     def _record(self, comp: Completion) -> None:
@@ -336,6 +341,51 @@ class ContinuousEngine:
                                   cancelled=comp.cancelled)
         self.stats["requests"] += 1
         self.stats["tokens"] += comp.n_tokens
+        if self.auditor is not None:
+            self.auditor.on_completion(comp)
+
+    def attach_auditor(self, auditor) -> None:
+        """Attach a :class:`repro.obs.audit.ShadowAuditor`. Decode
+        thread only from then on — the auditor's counters share the
+        metrics mirror's single-writer contract."""
+        self.auditor = auditor
+
+    def audit_tick(self) -> bool:
+        """Advance the audit lane by at most one decoder call (no-op
+        without an auditor or when paying traffic is active — the
+        auditor itself defers to the scheduler's admission signals).
+        Returns True when audit work ran."""
+        if self.auditor is None:
+            return False
+        ran = self.auditor.tick()
+        if ran:
+            # audits finish between scheduler steps — mirror here too,
+            # or counters go stale once the engine idles
+            self._mirror_audit()
+        return ran
+
+    def _mirror_audit(self) -> None:
+        if self.auditor is None:
+            return
+        a = self.auditor
+        self.metrics.audits_sampled = a.sampled
+        self.metrics.audits_completed = a.completed
+        self.metrics.audit_dropped = a.dropped
+        self.metrics.audit_divergences = a.divergences_total()
+        self.metrics.audit_backlog = a.backlog
+        self.metrics.audit_regret = a.regret
+
+    @property
+    def audit_pending(self) -> bool:
+        return self.auditor is not None and self.auditor.pending
+
+    def drain_audits(self) -> None:
+        """Run the audit backlog to empty (offline/test convenience;
+        the serving loop instead interleaves single ``audit_tick``
+        calls between scheduler ticks)."""
+        while self.audit_pending:
+            if not self.audit_tick():
+                break
 
     def run_to_completion(self) -> List[Completion]:
         out: List[Completion] = []

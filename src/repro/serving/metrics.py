@@ -84,6 +84,17 @@ class ServeMetrics:
     # effective host budget (repro.launch.host): XLA:CPU intra-op pool
     # threads this engine's dispatches may use (0 = unbudgeted)
     host_threads: int = 0
+    # shadow auditor (repro.obs.audit, mirrored each engine step):
+    # completions sampled for re-decode, audits finished, jobs dropped
+    # at the bounded backlog, bit-level divergences found, and the
+    # current backlog depth (gauge)
+    audits_sampled: int = 0
+    audits_completed: int = 0
+    audit_dropped: int = 0
+    audit_divergences: int = 0
+    audit_backlog: int = 0
+    audit_regret: int = 0              # early-exited rows the oracle
+                                       # would have continued differently
     # decode thread writes / asyncio metrics reader snapshots
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
@@ -203,6 +214,12 @@ class ServeMetrics:
             "post_warm_compiles": self.post_warm_compiles,
             "prewarmed": self.prewarmed,
             "host_threads": self.host_threads,
+            "audits_sampled": self.audits_sampled,
+            "audits_completed": self.audits_completed,
+            "audit_dropped": self.audit_dropped,
+            "audit_divergences": self.audit_divergences,
+            "audit_backlog": self.audit_backlog,
+            "audit_regret": self.audit_regret,
             "latency_p50_s": percentile(lat, 50),
             "latency_p99_s": percentile(lat, 99),
             "ttfb_p50_s": percentile(ttfb, 50),

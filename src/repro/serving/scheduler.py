@@ -84,6 +84,9 @@ class Gang:
         self.nfe_seen = 0
         self.syncs_seen = 0          # state.host_syncs high-water mark
         self.logit_syncs_seen = 0    # state.logit_syncs high-water mark
+        # (B, K) commit-time confidences of the block drained this tick
+        # (set by _drain_block_stats, consumed by _harvest same-tick)
+        self.last_commit_conf = None
 
     @property
     def batch(self) -> int:
@@ -237,6 +240,36 @@ class BlockScheduler:
     @property
     def idle(self) -> bool:
         return not (self.waiting or self.paused or self.gangs)
+
+    def debug_state(self) -> dict:
+        """JSON-safe snapshot of scheduler occupancy for operator
+        inspection (``/debug/vars``) and flight-recorder dumps. Reads
+        may come from the asyncio thread while the decode thread
+        mutates — ``list()`` snapshots keep iteration safe; individual
+        fields can be one tick stale, which is fine for debugging."""
+        gangs = list(self.gangs)
+        return {
+            "waiting": len(self.waiting),
+            "paused": len(self.paused),
+            "slots_used": self.slots_used,
+            "max_slots": self.max_slots,
+            "live_rows": self.live_rows,
+            "merges": self.merges,
+            "pending_preempts": len(self._preempt),
+            "pending_cancels": len(self._cancel),
+            "jit_cache_size": self.jit_cache_size(),
+            "compile": self.compile_watch.counters(),
+            "gangs": [{
+                "batch": g.batch,
+                "live_rows": len(g.live_rows()),
+                "block_idx": g.state.block_idx,
+                "n_blocks": g.state.n_blocks,
+                "prompt_len": g.state.prompt_len,
+                "method": g.decoder.dcfg.method,
+                "uids": [r.uid for r in list(g.requests)
+                         if r is not None],
+            } for g in gangs],
+        }
 
     def jit_cache_size(self) -> int:
         """Compiled variants across every decoder *and* the executor's
@@ -421,6 +454,7 @@ class BlockScheduler:
         and resumed on one engine."""
         self._uid += 1
         req.uid = self._uid
+        req.stolen += 1
         if self.tracer is not None and req.trace_id:
             self.tracer.async_begin(req.trace_id, "queue", pid=self.pid,
                                     uid=req.uid, stolen=True)
@@ -568,9 +602,11 @@ class BlockScheduler:
         every tick so compaction (which builds fresh states) never
         loses or double-counts a block."""
         stats = gang.state.block_stats
+        gang.last_commit_conf = None
         if not stats:
             return
         gang.state.block_stats = []
+        gang.last_commit_conf = stats[-1].commit_conf
         if self.telemetry is not None:
             self.telemetry.extend(stats)
         if self.block_hist is not None:
@@ -730,6 +766,9 @@ class BlockScheduler:
         admit = req.admit_time if req.admit_time >= 0 else now
         first = req.first_block_time if req.first_block_time >= 0 else now
         self._trace_finish(req)
+        conf = (np.concatenate(req.commit_conf).astype(np.float32)
+                if req.commit_conf else None)
+        K = self.dcfg.block_size
         return Completion(
             uid=req.uid, text=self._decode_text(gen), tokens=gen,
             latency_s=now - req.submit_time, nfe=req.nfe,
@@ -740,7 +779,11 @@ class BlockScheduler:
             host_syncs=req.host_syncs, logit_syncs=req.logit_syncs,
             cache_hit_tokens=req.cache_hit_tokens,
             expected_hit_tokens=req.expected_hit_tokens,
-            trace_id=req.trace_id)
+            trace_id=req.trace_id,
+            prompt_tokens=req.prompt_tokens,
+            commit_conf=conf,
+            stolen=req.stolen > 0,
+            early_exited=req.blocks_decoded * K < req.gen_len)
 
     def _harvest(self, gang: Gang, dnfe: int, dsync: int = 0,
                  dlogit: int = 0, t0_ns: Optional[int] = None,
@@ -766,6 +809,9 @@ class BlockScheduler:
             if bidx >= 0:   # a zero-block request decodes nothing
                 req.blocks_decoded += 1
                 toks = st.x[i, bstart:bstart + K].copy()
+                if gang.last_commit_conf is not None:
+                    req.commit_conf.append(np.asarray(
+                        gang.last_commit_conf[i], np.float32))
                 # chunk *text* is what network consumers concatenate:
                 # clamp it to the requested max_tokens (gen_len is
                 # block-rounded) and mute blocks after an EOS block so

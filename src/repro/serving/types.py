@@ -33,6 +33,12 @@ class ServeRequest:
                                        # assembled from the cross-request
                                        # prefix cache (0 = cold)
     trace_id: str = ""                 # repro.obs correlation id ("" = off)
+    stolen: int = 0                    # times adopted mid-decode by another
+                                       # engine (adopt_paused)
+    commit_conf: list = dataclasses.field(default_factory=list)
+                                       # per harvested block: (K,) float32
+                                       # commit-time confidences for this
+                                       # row (repro.obs.audit calibration)
 
     @property
     def bucket(self):
@@ -79,6 +85,14 @@ class Completion:
                                        # prefill (repro.cache)
     expected_hit_tokens: int = 0       # router/admission-time estimate
     trace_id: str = ""                 # repro.obs correlation id ("" = off)
+    prompt_tokens: Optional[np.ndarray] = None
+                                       # (P,) int32 — kept so the shadow
+                                       # auditor can re-decode the request
+    commit_conf: Optional[np.ndarray] = None
+                                       # (n_blocks*K,) float32 commit-time
+                                       # confidences (untrimmed gen axis)
+    stolen: bool = False               # decoded partly on an adopting engine
+    early_exited: bool = False         # an EOS block skipped later blocks
 
     @property
     def tokens_per_s(self) -> float:

@@ -144,6 +144,42 @@ def test_chrome_trace_export_schema(tmp_path):
     assert {"frontend", "engine-0", "decode"} <= names
 
 
+def test_trace_flusher_periodic_and_final(tmp_path):
+    from repro.obs.trace import TraceFlusher
+
+    tr = Tracer()
+    path = str(tmp_path / "trace.json")
+    fl = TraceFlusher(tr, path, interval_s=0.05).start()
+    with tr.span("early"):
+        pass
+    deadline = time.time() + 5.0
+    while fl.flushes == 0 and time.time() < deadline:
+        time.sleep(0.02)
+    assert fl.flushes >= 1
+    early = json.loads(open(path).read())["traceEvents"]
+    assert any(e.get("name") == "early" for e in early)
+    with tr.span("late"):
+        pass
+    fl.stop()  # final_flush=True picks up spans after the last tick
+    assert not fl._thread.is_alive()
+    late = json.loads(open(path).read())["traceEvents"]
+    assert any(e.get("name") == "late" for e in late)
+
+
+def test_trace_flusher_stop_without_final_flush(tmp_path):
+    from repro.obs.trace import TraceFlusher
+
+    tr = Tracer()
+    path = str(tmp_path / "trace.json")
+    fl = TraceFlusher(tr, path, interval_s=60.0).start()
+    with tr.span("never-flushed"):
+        pass
+    fl.stop(final_flush=False)
+    assert not fl._thread.is_alive()
+    import os
+    assert not os.path.exists(path)  # no tick fired, no final write
+
+
 # ------------------------------------------------- span trees (lifecycle)
 
 
