@@ -45,6 +45,14 @@ RULES = [
     ("host_syncs_per_block_unchanged", "true", None),
     ("within_tolerance", "true", None),
     ("recompiled_after_warmup", "exact", None),
+    # disaggregation gate (BENCH_disagg*.json): the bench's own
+    # self-asserted verdicts — pre-warm coverage, prefill->decode
+    # handoffs actually happened (and prefill engines never decoded),
+    # and the decode pool's storm-window degradation stayed within the
+    # co-located fleet's (with the bench's built-in noise slack)
+    ("zero_post_warm_compiles", "true", None),
+    ("handoffs_ok", "true", None),
+    ("decode_pool_insulated", "true", None),
     ("audits_completed", "min_ratio", 1.0),   # never fewer than baseline
     ("audit_errors", "exact", None),
     ("tracer_dropped", "exact", None),

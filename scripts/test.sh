@@ -9,6 +9,10 @@
 #                                # trip, SSE, 429, deadlines, disconnect)
 #   scripts/test.sh sharded      # mesh-parallel decode suite (forced
 #                                # 8-device host mesh) + sharded bench
+#   scripts/test.sh disagg       # disaggregated prefill/decode pool
+#                                # suite (roles, radix-store handoff,
+#                                # crash re-route) + mixed-workload
+#                                # insulation bench
 #   scripts/test.sh cache        # cross-request prefix cache suite +
 #                                # a quick bench_cache run
 #   scripts/test.sh obs          # observability suite (tracer, span
@@ -220,8 +224,23 @@ run_gate() {
         --out "$fresh/BENCH_obs_quick.json"
     python benchmarks/bench_cache.py --quick \
         --out "$fresh/BENCH_cache_quick.json"
+    python benchmarks/bench_disagg.py --quick \
+        --out "$fresh/BENCH_disagg_quick.json"
     python scripts/bench_gate.py --fresh "$fresh" --baseline git:HEAD \
         --out results/GATE.json
+}
+
+run_disagg() {
+    # disaggregated prefill/decode pools: role-fenced stealing, the
+    # prefill->decode handoff through the shared radix store (token
+    # identity vs the co-located path), crash re-route, cancel races,
+    # drain ordering; then the mixed-workload bench (steady decode
+    # stream + Poisson long-prompt storm) comparing co-located vs
+    # pooled fleets in budgeted subprocesses
+    python -m pytest -x -q tests/test_disagg.py
+    echo "== bench_disagg --quick =="
+    python benchmarks/bench_disagg.py --quick \
+        --out results/BENCH_disagg_quick.json
 }
 
 run_server() {
@@ -252,6 +271,7 @@ case "${1:-suite}" in
     kernels) run_kernels ;;
     server)  run_server ;;
     sharded) run_sharded ;;
+    disagg)  run_disagg ;;
     cache)   run_cache ;;
     obs)     run_obs ;;
     audit)   run_audit ;;

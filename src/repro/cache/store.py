@@ -14,9 +14,19 @@ prefix, across gen-length buckets and across decode methods.
 Placement: KV numerics and shapes are mesh-specific (tensor-parallel
 head padding, sharded-matmul reduction order), so a store is keyed by
 the ``DecodeExecutor`` placement exactly like ``PrefixKVPool`` — the
-scheduler refuses a store bound to a different mesh, and a multi-engine
-deployment holds one store per engine (which is what makes the
-router's cache-affinity policy meaningful).
+scheduler refuses a store bound to a different mesh, and a co-located
+multi-engine deployment holds one store per engine (which is what
+makes the router's cache-affinity policy meaningful).
+
+Sharing: disaggregated prefill/decode pools need ONE store visible to
+every engine — the prefill pool publishes chunk KV here and the decode
+pool re-assembles it. Numerics depend on the mesh *shape* (reduction
+order, head padding), not on which device ids back it, so a shared
+store is keyed by ``DecodeExecutor.shape_key`` instead of the
+device-id placement and constructed with ``shared=True``, which also
+turns on internal locking (N engine threads match/insert/evict
+concurrently; pins protect chunks across multi-call spans, the lock
+protects the tree structure within each call).
 
 Eviction: ref-counted LRU over leaf chunks with a byte budget
 (``max_bytes``). ``match`` pins the returned chain; the caller unpins
@@ -27,6 +37,8 @@ storage is a future optimization, not a semantic change.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -39,10 +51,16 @@ HOST_PLACEMENT = ("host",)    # mirrors repro.serving.pool
 class PrefixKVCache:
     def __init__(self, chunk_tokens: int = 16,
                  max_bytes: int = 256 << 20,
-                 placement: Tuple = HOST_PLACEMENT):
+                 placement: Tuple = HOST_PLACEMENT,
+                 shared: bool = False):
         self.chunk_tokens = chunk_tokens
         self.max_bytes = max_bytes
         self.placement = tuple(placement)
+        self.shared = shared
+        # single-engine stores are touched only by that engine's decode
+        # thread (plus lock-free match_len probes) — no lock overhead
+        self._lock = (threading.RLock() if shared
+                      else contextlib.nullcontext())
         self.tree = RadixTree(chunk_tokens)
         self.bytes = 0
         self.evictions = 0
@@ -54,33 +72,37 @@ class PrefixKVCache:
     def __repr__(self):
         return (f"PrefixKVCache(chunk={self.chunk_tokens}, "
                 f"nodes={len(self.tree)}, bytes={self.bytes}, "
-                f"placement={self.placement})")
+                f"placement={self.placement}, shared={self.shared})")
 
     # ------------------------------------------------------ lookup
 
     def match_len(self, prompt_tokens: np.ndarray) -> int:
         """Longest cached prefix in tokens. Pure read (no pin, no LRU
         touch, no counters) — the admission grouper and the router's
-        affinity heuristic call this from other threads."""
-        return self.tree.match_tokens(prompt_tokens)
+        affinity heuristic call this from other threads. A shared
+        store locks so the walk never races a sibling's eviction."""
+        with self._lock:
+            return self.tree.match_tokens(prompt_tokens)
 
     def match(self, prompt_tokens: np.ndarray) -> List[ChunkNode]:
         """Longest cached prefix as a *pinned* node chain. The caller
         owns one reference per returned node and must ``unpin`` the
         chain once the KV has been copied out."""
-        chain = self.tree.walk(prompt_tokens, touch=True)
-        for node in chain:
-            node.refs += 1
-        self.lookups += 1
-        if chain:
-            self.lookup_hits += 1
-            self.lookup_hit_tokens += len(chain) * self.chunk_tokens
-        return chain
+        with self._lock:
+            chain = self.tree.walk(prompt_tokens, touch=True)
+            for node in chain:
+                node.refs += 1
+            self.lookups += 1
+            if chain:
+                self.lookup_hits += 1
+                self.lookup_hit_tokens += len(chain) * self.chunk_tokens
+            return chain
 
     def unpin(self, chain: Sequence[ChunkNode]) -> None:
-        for node in chain:
-            assert node.refs > 0
-            node.refs -= 1
+        with self._lock:
+            for node in chain:
+                assert node.refs > 0
+                node.refs -= 1
 
     # ------------------------------------------------------ mutation
 
@@ -97,27 +119,30 @@ class PrefixKVCache:
         from repro.cache.slicing import slice_nbytes
         tokens = np.asarray(prompt_tokens, np.int32)
         C = self.chunk_tokens
-        if parent_chain is not None and len(parent_chain) >= start_chunk:
-            chain = list(parent_chain[:start_chunk])
-        else:
-            chain = self.tree.walk(tokens)
-            if len(chain) < start_chunk:
-                return 0      # parent chain evicted under us: give up
-            chain = chain[:start_chunk]
-        parent = chain[-1] if chain else None
-        created = 0
-        for i, kv in enumerate(chunk_kvs):
-            c = start_chunk + i
-            nb = slice_nbytes(kv)
-            before = len(self.tree)
-            parent = self.tree.extend(parent, tokens[c * C:(c + 1) * C],
-                                      kv, nb)
-            if len(self.tree) > before:
-                created += 1
-                self.bytes += nb
-                self.inserts += 1
-        self._evict_to_budget()
-        return created
+        with self._lock:
+            if (parent_chain is not None
+                    and len(parent_chain) >= start_chunk):
+                chain = list(parent_chain[:start_chunk])
+            else:
+                chain = self.tree.walk(tokens)
+                if len(chain) < start_chunk:
+                    return 0  # parent chain evicted under us: give up
+                chain = chain[:start_chunk]
+            parent = chain[-1] if chain else None
+            created = 0
+            for i, kv in enumerate(chunk_kvs):
+                c = start_chunk + i
+                nb = slice_nbytes(kv)
+                before = len(self.tree)
+                parent = self.tree.extend(parent,
+                                          tokens[c * C:(c + 1) * C],
+                                          kv, nb)
+                if len(self.tree) > before:
+                    created += 1
+                    self.bytes += nb
+                    self.inserts += 1
+            self._evict_to_budget()
+            return created
 
     def _evict_to_budget(self) -> None:
         """Level-wise LRU sweep: consume one sorted leaf scan in stamp
@@ -145,9 +170,11 @@ class PrefixKVCache:
         return len(self.tree)
 
     def stats(self) -> dict:
-        return {"nodes": len(self.tree), "bytes": self.bytes,
-                "chunk_tokens": self.chunk_tokens,
-                "max_bytes": self.max_bytes,
-                "evictions": self.evictions, "inserts": self.inserts,
-                "lookups": self.lookups, "lookup_hits": self.lookup_hits,
-                "lookup_hit_tokens": self.lookup_hit_tokens}
+        with self._lock:
+            return {"nodes": len(self.tree), "bytes": self.bytes,
+                    "chunk_tokens": self.chunk_tokens,
+                    "max_bytes": self.max_bytes, "shared": self.shared,
+                    "evictions": self.evictions, "inserts": self.inserts,
+                    "lookups": self.lookups,
+                    "lookup_hits": self.lookup_hits,
+                    "lookup_hit_tokens": self.lookup_hit_tokens}

@@ -36,7 +36,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import sys
-from typing import Optional
+from typing import Dict, Optional
 
 _XLA_ENV_KEYS = ("XLA_FLAGS", "PJRT_NPROC", "JAX_PLATFORMS")
 
@@ -50,7 +50,7 @@ class HostBudget:
     engines: int
     cores: int
     intra_op: int
-    source: str          # "derived" | "override"
+    source: str          # "derived" | "override" | "pool/<either>"
 
     def describe(self) -> str:
         return (f"{self.intra_op} intra-op thread(s)/engine "
@@ -69,6 +69,26 @@ def compute_host_budget(engines: int, threads_per_engine: int = 0,
     if threads_per_engine > 0:
         return HostBudget(engines, cores, threads_per_engine, "override")
     return HostBudget(engines, cores, max(1, cores // engines), "derived")
+
+
+def compute_pool_budgets(pool_sizes: Dict[str, int],
+                         threads_per_engine: int = 0,
+                         cores: Optional[int] = None) \
+        -> Dict[str, HostBudget]:
+    """Per-pool budget records for a disaggregated fleet
+    (``--pool prefill:N,decode:M``). ``PJRT_NPROC`` is process-global —
+    every engine in the process shares ONE intra-op pool size, so the
+    thread count is derived from the *total* engine count and cannot
+    differ between pools; what differs per pool is the record itself
+    (engine count, ``source="pool/..."``), which each engine carries
+    into its metrics (``repro_host_threads_per_engine``) and trace
+    spans so a post-mortem can see what a pool ran under. Apply the
+    process env with ``apply_host_budget`` on the *total* budget."""
+    total = sum(max(0, n) for n in pool_sizes.values())
+    base = compute_host_budget(total, threads_per_engine, cores)
+    return {role: HostBudget(n, base.cores, base.intra_op,
+                             f"pool/{base.source}")
+            for role, n in pool_sizes.items()}
 
 
 def _backend_initialized() -> bool:

@@ -23,6 +23,12 @@ Multi-engine hosts should also budget and pre-warm (repro.launch.host):
     ... --engines 2 --host-threads-per-engine 2 \
         --compile-cache-dir results/compile_cache --prewarm 16:32
 
+or disaggregate prefill from decode (one shared prefix store; primed
+requests hand off prefill pool -> decode pool at admission):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tiny --http 8000 \
+        --prefix-cache --pool prefill:1,decode:2
+
 Quality auditing + post-mortems (repro.obs.audit, HTTP mode):
 
     ... --http 8000 --audit-rate 0.05 --audit-oracle auto \
@@ -42,6 +48,29 @@ def _parse_mesh(s: str):
     except ValueError:
         raise SystemExit(f"--mesh wants 'data,model' ints, got {s!r}")
     return data, model
+
+
+def _parse_pool(s: str):
+    """``"prefill:N,decode:M"`` -> {"prefill": N, "decode": M}."""
+    sizes = {"prefill": 0, "decode": 0}
+    for part in s.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            role, n = part.split(":")
+            sizes[role.strip()] += int(n)
+        except (ValueError, KeyError):
+            raise SystemExit(
+                f"--pool wants 'prefill:N,decode:M', got {part!r}")
+    if sizes["decode"] < 1:
+        raise SystemExit("--pool needs at least one decode engine "
+                         "(prefill-only engines can never finish a "
+                         "request)")
+    if sizes["prefill"] < 1:
+        raise SystemExit("--pool without a prefill engine is plain "
+                         "--engines; drop the flag")
+    return sizes
 
 
 def _parse_prewarm(s: str):
@@ -111,6 +140,12 @@ def main():
                     help="engine loops, one per disjoint submesh, "
                          "behind one HTTP front end (least-loaded "
                          "routing; HTTP mode only for N > 1)")
+    ap.add_argument("--pool", default="", metavar="prefill:N,decode:M",
+                    help="disaggregated engine pools: N prefill-only "
+                         "engines prime prompt KV into ONE shared "
+                         "prefix store and hand each request off to "
+                         "one of M decode engines (implies --engines "
+                         "N+M; needs --http and --prefix-cache)")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="fake this many host devices via XLA_FLAGS "
                          "(CI/demo; must be >= engines * data * model)")
@@ -193,6 +228,21 @@ def main():
     if args.prefix_cache and args.method == "vanilla":
         raise SystemExit("--prefix-cache has no effect with --method "
                          "vanilla (no KV cache to reuse)")
+    pool_sizes = _parse_pool(args.pool) if args.pool else None
+    if pool_sizes is not None:
+        if not args.http:
+            raise SystemExit("--pool needs --http (the prefill->decode "
+                             "handoff rides the EngineRouter in the "
+                             "HTTP front end)")
+        if not args.prefix_cache:
+            raise SystemExit("--pool needs --prefix-cache (primed "
+                             "prompt KV travels through the shared "
+                             "prefix store)")
+        n_pool = pool_sizes["prefill"] + pool_sizes["decode"]
+        if args.engines not in (1, n_pool):
+            raise SystemExit(f"--pool {args.pool} implies --engines "
+                             f"{n_pool}, got --engines {args.engines}")
+        args.engines = n_pool
     slo_targets = {"ttfb_p50_s": args.slo_ttfb_p50_ms / 1e3,
                    "token_latency_s": args.slo_token_latency_ms / 1e3,
                    "goodput_tok_s": args.slo_goodput_tok_s}
@@ -220,6 +270,10 @@ def main():
     from repro.launch import host as host_budgeting
     budget = host_budgeting.compute_host_budget(
         args.engines, args.host_threads_per_engine)
+    pool_budgets = None
+    if pool_sizes is not None:
+        pool_budgets = host_budgeting.compute_pool_budgets(
+            pool_sizes, args.host_threads_per_engine)
     host_budgeting.apply_host_budget(budget)
     if args.force_host_devices:
         host_budgeting.force_host_device_count(args.force_host_devices)
@@ -233,6 +287,9 @@ def main():
             print("persistent compile cache unsupported by this jax "
                   "build; continuing without")
     print(f"host budget: {budget.describe()}")
+    if pool_budgets is not None:
+        for role in ("prefill", "decode"):
+            print(f"pool {role}: {pool_budgets[role].describe()}")
     from repro.core.decoder import DecodeConfig
     from repro.core.engine import ServingEngine
     from repro.data.synthetic import ArithmeticDataset
@@ -276,20 +333,43 @@ def main():
         executors = [DecodeExecutor(cfg, params, m)
                      for m in make_submeshes(args.engines, *mesh_dims)]
 
-    def make_engine(ex):
+    # disaggregated pools share ONE store: the prefill pool publishes
+    # chunk KV into it, the decode pool's admission prefill finds the
+    # full hit. Keyed by mesh *shape* (numerics are placement-shape-
+    # dependent, not device-id-dependent), so every same-shape engine
+    # may read it.
+    shared_store = None
+    if pool_sizes is not None:
+        from repro.cache import HOST_PLACEMENT, PrefixKVCache
+        shared_store = PrefixKVCache(
+            chunk_tokens=args.cache_chunk, max_bytes=args.cache_bytes,
+            placement=(executors[0].shape_key
+                       if executors[0] is not None else HOST_PLACEMENT),
+            shared=True)
+
+    def make_engine(ex, role: str = "both"):
         from repro.serving import ContinuousEngine
         store = None
         if args.prefix_cache:
-            # one store per engine (placement-bound, like the KV pool);
-            # the router's cache-affinity policy relies on that split
-            from repro.cache import HOST_PLACEMENT, PrefixKVCache
-            store = PrefixKVCache(
-                chunk_tokens=args.cache_chunk, max_bytes=args.cache_bytes,
-                placement=ex.placement if ex is not None
-                else HOST_PLACEMENT)
+            if shared_store is not None:
+                store = shared_store
+            else:
+                # one store per engine (placement-bound, like the KV
+                # pool); the router's cache-affinity policy relies on
+                # that split
+                from repro.cache import HOST_PLACEMENT, PrefixKVCache
+                store = PrefixKVCache(
+                    chunk_tokens=args.cache_chunk,
+                    max_bytes=args.cache_bytes,
+                    placement=ex.placement if ex is not None
+                    else HOST_PLACEMENT)
         return ContinuousEngine(cfg, params, d, max_slots=args.max_slots,
                                 tokenizer=tok, executor=ex,
-                                prefix_cache=store, host_budget=budget)
+                                prefix_cache=store,
+                                prefill_only=(role == "prefill"),
+                                host_budget=(pool_budgets[role]
+                                             if pool_budgets is not None
+                                             else budget))
 
     tracer = None
     if args.trace_dir:
@@ -325,7 +405,12 @@ def main():
 
     if args.http:
         from repro.server import run as run_http
-        engines = [make_engine(ex) for ex in executors]
+        roles = None
+        if pool_sizes is not None:
+            roles = (["prefill"] * pool_sizes["prefill"]
+                     + ["decode"] * pool_sizes["decode"])
+        engines = [make_engine(ex, roles[i] if roles else "both")
+                   for i, ex in enumerate(executors)]
         attach_profiler(engines[0])
         prewarm_all(engines)
         audit = None
@@ -353,7 +438,7 @@ def main():
                      host=args.http_host, port=args.http,
                      max_pending=args.max_pending, tracer=tracer,
                      steal=not args.no_steal, audit=audit,
-                     watchdog=watchdog, flight=flight)
+                     watchdog=watchdog, flight=flight, roles=roles)
         finally:
             if flusher is not None:
                 flusher.stop(final_flush=False)

@@ -507,6 +507,29 @@ class HttpFrontend:
         emit("repro_steals_total", tot("steals_in"), "counter",
              "Requests migrated between engines by block-boundary work "
              "stealing.")
+        # engine busy time split by phase: prefill passes (prompt KV
+        # priming, cached-chunk replays) vs decode_block walls — the
+        # two never overlap on one engine, so the split partitions the
+        # decode thread's model time and makes pool sizing visible
+        emit("repro_prefill_busy_seconds_total",
+             f"{tot('prefill_busy_s'):.6f}", "counter",
+             "Wall seconds spent in prefill passes across engines.")
+        emit("repro_decode_busy_seconds_total",
+             f"{tot('decode_busy_s'):.6f}", "counter",
+             "Wall seconds spent in decode_block calls across engines.")
+        emit("repro_handoffs_total", tot("handoffs_in"), "counter",
+             "Requests handed off prefill pool -> decode pool through "
+             "the shared radix store.")
+        loops = getattr(self.loop, "loops", None) or [self.loop]
+        roles = {}
+        for lp in loops:
+            role = getattr(lp, "role", "both")
+            roles[role] = roles.get(role, 0) + 1
+        out.append("# HELP repro_pool_engines Engine loops per pool "
+                   "role (prefill-only vs decode-capable).")
+        out.append("# TYPE repro_pool_engines gauge")
+        for role, n in sorted(roles.items()):
+            out.append(f'repro_pool_engines{{role="{role}"}} {n}')
         from repro.obs.compile import persistent_cache_counters
         pc = persistent_cache_counters()
         emit("repro_persistent_cache_hits_total", pc["hits"], "counter",
@@ -688,6 +711,18 @@ class HttpFrontend:
                     ("steals_out_total", "steals_out", "counter",
                      "Requests given up via work stealing per engine.",
                      "{}"),
+                    ("prefill_busy_seconds_total", "prefill_busy_s",
+                     "counter", "Wall seconds in prefill passes per "
+                     "engine.", "{:.6f}"),
+                    ("decode_busy_seconds_total", "decode_busy_s",
+                     "counter", "Wall seconds in decode_block calls per "
+                     "engine.", "{:.6f}"),
+                    ("handoffs_in_total", "handoffs_in", "counter",
+                     "Requests adopted from the prefill pool per "
+                     "engine.", "{}"),
+                    ("handoffs_out_total", "handoffs_out", "counter",
+                     "Primed requests handed to the decode pool per "
+                     "engine.", "{}"),
                     ("compile_misses_total", "compile_misses", "counter",
                      "Jit variants compiled per engine.", "{}"),
                     ("post_warm_compiles_total", "post_warm_compiles",
@@ -730,16 +765,19 @@ def _flight_state(loops, watchdog=None):
 
 
 def _front(engines, max_pending: int, tracer=None, steal: bool = True,
-           audit=None, watchdog=None, flight=None):
+           audit=None, watchdog=None, flight=None, roles=None):
     """One EngineLoop per engine; >1 engine routes through
     ``EngineRouter`` (least-loaded by live rows, block-boundary work
     stealing unless ``steal=False``). ``tracer`` claims a named track
     group per engine. ``audit`` (an ``AuditConfig``) attaches a
     ``ShadowAuditor`` per engine; ``watchdog``/``flight`` wire SLO
-    observation and crash/breach dumps into every loop."""
+    observation and crash/breach dumps into every loop. ``roles`` (one
+    entry per engine, ``"prefill"``/``"decode"``/``None``) builds a
+    disaggregated fleet — the router partitions pools by loop role."""
     engines = engines if isinstance(engines, (list, tuple)) else [engines]
     loops = [EngineLoop(e, max_pending=max_pending, tracer=tracer,
-                        index=i) for i, e in enumerate(engines)]
+                        index=i, role=roles[i] if roles else None)
+             for i, e in enumerate(engines)]
     if audit is not None:
         from repro.obs.audit import ShadowAuditor
         for e in engines:
@@ -758,18 +796,20 @@ def _front(engines, max_pending: int, tracer=None, steal: bool = True,
 
 async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
                 max_pending: int = 64, tracer=None, steal: bool = True,
-                audit=None, watchdog=None, flight=None) -> None:
+                audit=None, watchdog=None, flight=None,
+                roles=None) -> None:
     """Run the HTTP front end until cancelled, then drain gracefully.
     ``engine`` may be one ``ContinuousEngine`` or a list (one per
     device/mesh; requests are routed least-loaded and rebalanced by
     work stealing unless ``steal=False``). ``audit``/``watchdog``/
-    ``flight`` enable the repro.obs.audit layer (see ``_front``)."""
+    ``flight`` enable the repro.obs.audit layer; ``roles`` builds
+    disaggregated prefill/decode pools (see ``_front``)."""
     if watchdog is not None and flight is not None \
             and watchdog.flight is None:
         watchdog.flight = flight
     frontend = HttpFrontend(
         _front(engine, max_pending, tracer, steal, audit=audit,
-               watchdog=watchdog, flight=flight),
+               watchdog=watchdog, flight=flight, roles=roles),
         host=host, port=port, tracer=tracer, flight=flight,
         watchdog=watchdog)
     await frontend.start()
@@ -787,11 +827,11 @@ async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
 
 def run(engine, host: str = "127.0.0.1", port: int = 8000,
         max_pending: int = 64, tracer=None, steal: bool = True,
-        audit=None, watchdog=None, flight=None) -> None:
+        audit=None, watchdog=None, flight=None, roles=None) -> None:
     """Blocking entry point used by ``repro.launch.serve --http``."""
     try:
         asyncio.run(serve(engine, host, port, max_pending, tracer=tracer,
                           steal=steal, audit=audit, watchdog=watchdog,
-                          flight=flight))
+                          flight=flight, roles=roles))
     except KeyboardInterrupt:
         pass

@@ -76,6 +76,10 @@ class Ticket:
         self.loop = None          # owning EngineLoop (set by EngineRouter)
         self.trace_id = ""        # repro.obs correlation id ("" = off)
         self.accept_ns: Optional[int] = None  # HTTP-accept timestamp
+        self.handoff_t: Optional[float] = None
+                                  # prefill-pool extraction stamp; the
+                                  # decode-pool adopter measures the
+                                  # handoff wait from it
 
     def _emit(self, event: Event) -> None:
         try:
@@ -86,11 +90,23 @@ class Ticket:
 
 class EngineLoop:
     def __init__(self, engine, max_pending: int = 64,
-                 idle_poll_s: float = 0.05, tracer=None, index: int = 0):
+                 idle_poll_s: float = 0.05, tracer=None, index: int = 0,
+                 role: Optional[str] = None):
         self.engine = engine
         self.max_pending = max_pending
         self.idle_poll_s = idle_poll_s
         self.index = index          # position in the fleet (track label)
+        # pool role (disaggregated serving): "prefill" loops prime and
+        # hand off, "decode" loops adopt and decode, "both" is the
+        # co-located default. Derived from the engine when not given;
+        # a stated role must agree with the engine's mode.
+        derived = ("prefill" if getattr(engine, "prefill_only", False)
+                   else "both")
+        self.role = role or derived
+        if (self.role == "prefill") != (derived == "prefill"):
+            raise ValueError(
+                f"role {self.role!r} does not match engine "
+                f"prefill_only={getattr(engine, 'prefill_only', False)}")
         self.tracer = tracer
         if tracer is not None:
             engine.set_tracer(tracer, f"engine-{index}")
@@ -136,6 +152,7 @@ class EngineLoop:
         eng = self.engine
         out = {
             "index": self.index,
+            "role": self.role,
             "running": self.running,
             "inflight": self.inflight,
             "pending": len(self._pending),
@@ -143,6 +160,8 @@ class EngineLoop:
             "max_pending": self.max_pending,
             "steals_out": eng.metrics.steals_out,
             "steals_in": eng.metrics.steals_in,
+            "handoffs_out": eng.metrics.handoffs_out,
+            "handoffs_in": eng.metrics.handoffs_in,
             "scheduler": eng.scheduler.debug_state(),
         }
         if eng.auditor is not None:
@@ -234,8 +253,9 @@ class EngineLoop:
             if self._stop.is_set():
                 if not self._drain_on_stop:
                     self._cancel_all("shutdown")
-                elif not (self._pending or self._live
-                          or not eng.scheduler.idle):
+                elif not (self._pending or self._live or self.inflight
+                          or not eng.scheduler.idle
+                          or self._draining_prefill_peers()):
                     return
             self._check_deadlines()
             self._feed()
@@ -245,13 +265,26 @@ class EngineLoop:
                     for comp in eng.step():
                         self._finish(comp)
                 except Exception:
-                    # a decode failure must not kill the serving thread:
-                    # fail every in-flight request and keep accepting
-                    log.exception("engine.step failed; failing in-flight "
-                                  "requests")
+                    # an engine failure must not kill the serving
+                    # thread: move still-portable work to healthy
+                    # siblings, then fail whatever could not move and
+                    # keep accepting
+                    log.exception("engine.step failed; re-routing and "
+                                  "failing in-flight requests")
                     if self.flight is not None:
                         self.flight.dump("crash")
+                    # rows primed before the failure are store-backed
+                    # and safe to migrate — dispatch them first so the
+                    # blanket error-cancel below never reaches them
+                    self._dispatch_handoffs()
+                    moved = self._reroute_all()
+                    if moved:
+                        log.info("re-routed %d request(s) off engine %d "
+                                 "after step failure", moved, self.index)
                     self._cancel_all("error")
+            # prefill pool: migrate rows the step just primed (also
+            # drains anything a mid-tick failure left extracted)
+            self._dispatch_handoffs()
             # audit lane: one decoder call per iteration, and only when
             # the scheduler reports no waiting traffic (the auditor
             # checks again itself) — paying requests always preempt it
@@ -292,6 +325,8 @@ class EngineLoop:
                            [-ticket.req.priority, next(self._seq), ticket])
         elif kind == "adopt":            # I'm the thief: a parked row
             self._adopt(*ticket)
+        elif kind == "handoff_give":     # I'm a decode engine: a row the
+            self._adopt_handoff(*ticket)  # prefill pool just primed
         elif kind == "steal_done":       # grant report: ticket = count
             self._steal_inflight = False
             if not ticket:
@@ -390,6 +425,90 @@ class EngineLoop:
             return
         ticket.uid = self.engine.adopt_paused(req, state)
         self._live[ticket.uid] = ticket
+
+    # ------------------------------------------------- handoff
+
+    def _dispatch_handoffs(self) -> None:
+        """Prefill-pool side: migrate every row the scheduler just
+        primed to a decode-pool engine. The request travels bare — its
+        chunk KV is already in the shared radix store, so the adopter's
+        normal admission prefill reassembles it there (O(remainder)).
+        The ticket transfers exactly like a steal: ownership moves
+        first, so cancels queued behind this iteration forward to the
+        adopter and conclude exactly once."""
+        eng = self.engine
+        if not getattr(eng, "prefill_only", False):
+            return
+        for req in eng.take_handoffs():
+            ticket = self._live.pop(req.uid, None)
+            if ticket is None:
+                # direct engine submission (no front-end ticket):
+                # unsupported on a loop-owned prefill engine — a
+                # prefill pool can never complete it locally
+                log.error("handoff-ready request without a ticket "
+                          "(uid=%s) dropped — submit through the loop",
+                          req.uid)
+                continue
+            if ticket.done:
+                continue                 # cancel raced the extraction
+            target = (self.router.pick_decode_loop(exclude=self)
+                      if self.router is not None else None)
+            if target is None:
+                # no healthy decode engine: fail the request rather
+                # than strand it (the prefill pool cannot decode)
+                log.error("no decode-pool engine for handoff "
+                          "(uid=%s); failing request", req.uid)
+                ticket.uid = None
+                self._cancel_ticket(ticket, "error")
+                continue
+            ticket.uid = None            # adopter assigns its own uid
+            ticket.handoff_t = time.perf_counter()
+            self._transfer(ticket, target)
+            target._cmds.put(("handoff_give", (ticket, req), None))
+
+    def _adopt_handoff(self, ticket: Ticket, req) -> None:
+        """Decode-pool side: adopt a prefill-primed request. A cancel
+        that raced the migration already concluded the ticket — the
+        row's store chunks are unpinned (the prefill pass released
+        them), so dropping the request leaks nothing."""
+        if ticket.done:
+            return
+        wait = (time.perf_counter() - ticket.handoff_t
+                if ticket.handoff_t is not None else None)
+        ticket.handoff_t = None
+        ticket.uid = self.engine.adopt_handoff(req, wait_s=wait)
+        self._live[ticket.uid] = ticket
+
+    def _draining_prefill_peers(self) -> bool:
+        """A draining decode-capable loop may not exit while a prefill
+        sibling still holds work — that work's tail is a handoff this
+        loop must be alive to adopt. ``inflight`` is the signal — it is
+        bumped synchronously at submit (command-queue entries that
+        ``_pending``/``_live`` can't see yet) and moves to the adopter
+        at transfer, exactly when the obligation moves. Racy cross-
+        thread reads (GIL-safe, one-poll stale at worst); a dead
+        prefill thread never blocks."""
+        if self.router is None or self.role == "prefill":
+            return False
+        return any(lp.running and (lp.inflight
+                                   or not lp.engine.scheduler.idle)
+                   for lp in self.router.prefill_pool)
+
+    def _reroute_all(self) -> int:
+        """After an ``engine.step`` failure: move still-portable work —
+        scheduler-waiting requests, front-end-pending tickets, parked
+        host-portable rows — to healthy siblings (same pool first, then
+        any decode-capable engine) via the steal machinery, so a
+        crashed engine sheds its queue instead of failing it. Active
+        gang rows stay: their device state died with the step."""
+        if self.router is None:
+            return 0
+        moved = 0
+        while True:
+            target = self.router.pick_reroute_target(self)
+            if target is None or not self._steal_one(target):
+                return moved
+            moved += 1
 
     def _feed(self) -> None:
         """Hand queued requests to the scheduler in priority order.

@@ -39,10 +39,14 @@ class ContinuousEngine:
                  max_waiting: Optional[int] = None,
                  tokenizer=None, mesh=None, pad_pow2: bool = False,
                  executor=None, prefix_cache=None, tracer=None,
-                 host_budget=None):
+                 host_budget=None, prefill_only: bool = False):
         self.cfg = cfg
         self.dcfg = dcfg
         self.executor = executor
+        # prefill-pool member (disaggregated serving): primes prompt KV
+        # into the shared radix store and hands rows to the decode pool
+        # instead of decoding blocks — see BlockScheduler.prefill_only
+        self.prefill_only = prefill_only
         # effective per-engine host compute budget (repro.launch.host
         # applies it process-wide before jax init; the engine carries it
         # for /metrics and trace metadata)
@@ -63,8 +67,8 @@ class ContinuousEngine:
             cfg, params, dcfg, max_slots=max_slots, max_gang=max_gang,
             pool=self.pool, max_waiting=max_waiting, tokenizer=self.tok,
             mesh=mesh, pad_pow2=pad_pow2, executor=executor,
-            prefix_cache=prefix_cache, tracer=tracer,
-            telemetry=self.telemetry,
+            prefix_cache=prefix_cache, prefill_only=prefill_only,
+            tracer=tracer, telemetry=self.telemetry,
             block_hist=self.metrics.hist_block_wall)
         self.metrics.max_slots = self.scheduler.max_slots
         # cross-request prefix KV store (None unless dcfg.prefix_cache;
@@ -206,6 +210,14 @@ class ContinuousEngine:
             lambda: decoder.prefill(prompts, cache=cache),
             sched.jit_cache_size, "prewarm_prefill",
             tracer=self.tracer, pid=self.obs_pid)
+        if self.prefill_only:
+            # a prefill-pool engine never decodes a block: warming only
+            # the pool-acquire + chunk-prefill variants keeps its
+            # startup cost proportional to the work it actually does
+            if state.cache is not None:
+                self.pool.release(B, P + gen_len, state.cache)
+                state.cache = None
+            return
         while state.block_idx < state.n_blocks:
             watch.watched(
                 lambda: decoder.decode_block(state),
@@ -262,6 +274,41 @@ class ContinuousEngine:
                                     uid=uid, stolen=True)
         return uid
 
+    # ------------------------------------------------------ handoff
+
+    def take_handoffs(self) -> List[ServeRequest]:
+        """Drain the rows the last prefill-only step primed (chunk KV
+        already published to the shared store). Closes each request's
+        "request" span on this engine's track tagged ``handoff=True``
+        — the decode-pool adopter reopens it, exactly like the steal
+        span contract."""
+        out = self.scheduler.take_handoffs()
+        for req in out:
+            self.metrics.handoffs_out += 1
+            if self.tracer is not None and req.trace_id:
+                self.tracer.async_end(req.trace_id, "request",
+                                      pid=self.obs_pid, uid=req.uid,
+                                      handoff=True)
+        return out
+
+    def adopt_handoff(self, req: ServeRequest,
+                      wait_s: Optional[float] = None) -> int:
+        """Adopt a prefill-pool-primed request onto this engine's
+        waiting queue (its prompt KV comes out of the shared store at
+        admission). ``wait_s`` is the extraction→adoption gap the
+        owning loop measured. Returns the fresh uid."""
+        self.metrics.handoffs_in += 1
+        if wait_s is not None:
+            self.metrics.handoff_wait_s += wait_s
+            self.metrics.hist_handoff.observe(wait_s)
+        t_ns = time.perf_counter_ns()
+        uid = self.scheduler.adopt_handoff(req)
+        if self.tracer is not None and req.trace_id:
+            self.tracer.async_begin(req.trace_id, "request",
+                                    pid=self.obs_pid, t_ns=t_ns,
+                                    uid=uid, handoff=True)
+        return uid
+
     def preempt(self, uid: int) -> None:
         self.scheduler.preempt(uid)
 
@@ -305,6 +352,9 @@ class ContinuousEngine:
         self.stats["time_s"] += dt
         self.metrics.queue_depth = len(self.scheduler.waiting)
         self.metrics.gang_merges = self.scheduler.merges
+        # phase-split busy seconds (single decode-thread writer)
+        self.metrics.prefill_busy_s = self.scheduler.prefill_wall_s
+        self.metrics.decode_busy_s = self.scheduler.decode_wall_s
         # mirror the compile ledger (single decode-thread writer)
         watch = self.scheduler.compile_watch
         self.metrics.compile_misses = watch.misses

@@ -85,6 +85,16 @@ class DecodeExecutor:
         buffers are bucketed by it so meshes never share buffers."""
         return tuple(sorted(d.id for d in self.mesh.devices.flat))
 
+    @property
+    def shape_key(self) -> tuple:
+        """Hashable mesh-*shape* key. KV numerics depend on the mesh
+        shape (sharded-matmul reduction order, head padding), not on
+        which device ids back it — so a *shared* ``PrefixKVCache``
+        (disaggregated pools, host-staged numpy chunks) is keyed by
+        this: any executor with the same axis extents produces and
+        consumes byte-identical chunk KV."""
+        return ("shape",) + tuple(sorted(self.mesh.shape.items()))
+
     def __repr__(self):
         return (f"DecodeExecutor(mesh={dict(self.mesh.shape)}, "
                 f"devices={self.placement})")

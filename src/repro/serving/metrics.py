@@ -72,6 +72,15 @@ class ServeMetrics:
     # gave up to an idle sibling / adopted from a loaded one
     steals_out: int = 0
     steals_in: int = 0
+    # disaggregated prefill/decode pools: busy-seconds split by phase
+    # (mirrored from the scheduler each engine step — prefill passes vs
+    # decode_block walls) and the prefill→decode handoff flow through
+    # the shared radix store
+    prefill_busy_s: float = 0.0
+    decode_busy_s: float = 0.0
+    handoffs_out: int = 0              # rows this engine primed and gave up
+    handoffs_in: int = 0               # rows adopted from the prefill pool
+    handoff_wait_s: float = 0.0        # extraction -> decode-pool adoption
     # compile ledger (repro.obs.CompileWatch, mirrored each engine
     # step): new jit variants built vs dispatches served warm, wall
     # attributed to variant-building calls, and — after startup
@@ -116,6 +125,11 @@ class ServeMetrics:
         default_factory=lambda: Histogram(
             "repro_nfe_per_token", "Model evaluations per emitted token",
             NFE_BUCKETS), repr=False, compare=False)
+    hist_handoff: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(
+            "repro_handoff_wait_seconds",
+            "Prefill-pool extraction to decode-pool adoption",
+            LATENCY_BUCKETS_S), repr=False, compare=False)
 
     def sample_tick(self, live_rows: int, tick_dt: float) -> None:
         with self._lock:
@@ -140,7 +154,7 @@ class ServeMetrics:
     @property
     def histograms(self) -> List[Histogram]:
         return [self.hist_ttfb, self.hist_queue, self.hist_block_wall,
-                self.hist_nfe_per_token]
+                self.hist_nfe_per_token, self.hist_handoff]
 
     # ------------------------------------------------------ aggregates
 
@@ -205,6 +219,11 @@ class ServeMetrics:
             "prefix_cache_bytes": self.prefix_cache_bytes,
             "prefix_cache_nodes": self.prefix_cache_nodes,
             "busy_time_s": self.busy_time_s,
+            "prefill_busy_s": self.prefill_busy_s,
+            "decode_busy_s": self.decode_busy_s,
+            "handoffs_out": self.handoffs_out,
+            "handoffs_in": self.handoffs_in,
+            "handoff_wait_s": self.handoff_wait_s,
             "queue_wait_s": sum(r.queue_s for r in requests),
             "steals_out": self.steals_out,
             "steals_in": self.steals_in,

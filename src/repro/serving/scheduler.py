@@ -112,11 +112,26 @@ class BlockScheduler:
                  executor=None, batch_multiple: Optional[int] = None,
                  merge_gangs: bool = True,
                  prefix_cache: Optional[PrefixKVCache] = None,
+                 prefill_only: bool = False,
                  tracer=None, telemetry=None, block_hist=None):
         self.cfg = cfg
         self.params = params
         self.dcfg = dcfg
         self.executor = executor
+        # Disaggregated serving: a prefill-only scheduler admits and
+        # prefills gangs exactly like a co-located one (hit-homogeneous
+        # grouping included) but never decodes a block — each primed
+        # gang is dismantled into ``handoff_ready`` the same tick, its
+        # chunk KV already published to the (shared) radix store, and
+        # the owning EngineLoop migrates the requests to a decode-pool
+        # engine (see ``take_handoffs`` / ``adopt_handoff``).
+        self.prefill_only = prefill_only
+        self.handoff_ready: List[ServeRequest] = []
+        # busy-seconds split by phase (prefill = prefill/re-prime
+        # passes, decode = decode_block walls) — pool imbalance in a
+        # disaggregated fleet is visible here before it costs tok/s
+        self.prefill_wall_s = 0.0
+        self.decode_wall_s = 0.0
         # Gang batches sized as a multiple of the mesh's data-axis
         # extent shard evenly; any other size falls back to replicated
         # placement (never silent padding — see DecodeExecutor). The
@@ -164,11 +179,20 @@ class BlockScheduler:
             prefix_cache = PrefixKVCache(chunk_tokens=dcfg.cache_chunk,
                                          placement=placement)
         if prefix_cache is not None:
-            if tuple(prefix_cache.placement) != tuple(placement):
+            # a *shared* store (disaggregated pools) is keyed by mesh
+            # shape, not device ids: chunk KV is host-staged numpy and
+            # its numerics depend only on the mesh shape, so any
+            # same-shape executor may publish and consume it
+            shape_key = (executor.shape_key if executor is not None
+                         else HOST_PLACEMENT)
+            ok = (tuple(prefix_cache.placement) == tuple(placement)
+                  or (prefix_cache.shared
+                      and tuple(prefix_cache.placement) == tuple(shape_key)))
+            if not ok:
                 raise ValueError(
                     "PrefixKVCache must be bound to the scheduler's "
                     f"executor placement (store={prefix_cache.placement}, "
-                    f"scheduler={placement})")
+                    f"scheduler={placement}, shared needs {shape_key})")
             if prefix_cache.chunk_tokens != dcfg.cache_chunk:
                 raise ValueError(
                     f"PrefixKVCache chunk {prefix_cache.chunk_tokens} != "
@@ -239,7 +263,8 @@ class BlockScheduler:
 
     @property
     def idle(self) -> bool:
-        return not (self.waiting or self.paused or self.gangs)
+        return not (self.waiting or self.paused or self.gangs
+                    or self.handoff_ready)
 
     def debug_state(self) -> dict:
         """JSON-safe snapshot of scheduler occupancy for operator
@@ -251,6 +276,10 @@ class BlockScheduler:
         return {
             "waiting": len(self.waiting),
             "paused": len(self.paused),
+            "prefill_only": self.prefill_only,
+            "handoff_ready": len(self.handoff_ready),
+            "prefill_wall_s": round(self.prefill_wall_s, 6),
+            "decode_wall_s": round(self.decode_wall_s, 6),
             "slots_used": self.slots_used,
             "max_slots": self.max_slots,
             "live_rows": self.live_rows,
@@ -342,6 +371,14 @@ class BlockScheduler:
                 gen = state.x[0, state.prompt_len:
                               state.prompt_len + state.block_idx * K].copy()
                 return self._make_completion(req, gen, now, cancelled=True)
+        for r in self.handoff_ready:
+            # primed but not yet migrated to the decode pool: conclude
+            # here, immediately — the EngineLoop's dispatch skips done
+            # tickets, so the cancel fires exactly once
+            if r.uid == uid:
+                self.handoff_ready.remove(r)
+                return self._make_completion(
+                    r, np.zeros(0, np.int32), now, cancelled=True)
         active = any(r is not None and r.uid == uid and not g.emitted[i]
                      for g in self.gangs
                      for i, r in enumerate(g.requests))
@@ -462,6 +499,80 @@ class BlockScheduler:
         self.paused.append((req, state, self._decoder(req.gen_len)))
         return req.uid
 
+    # ------------------------------------------------------ handoff
+
+    def take_handoffs(self) -> List[ServeRequest]:
+        """Drain the requests a prefill-only tick primed; the owning
+        EngineLoop migrates each to a decode-pool engine."""
+        out, self.handoff_ready = self.handoff_ready, []
+        return out
+
+    def adopt_handoff(self, req: ServeRequest) -> int:
+        """Adopt a request primed on a prefill-pool engine: fresh uid
+        in this scheduler's namespace (the prefill engine's uid could
+        collide with a live one here), back onto the waiting queue with
+        every lifecycle counter intact — ``submit_time`` and the
+        prefill-pass nfe/syncs carry over, so the Completion reports
+        true end-to-end latency. The normal admission path prefills it
+        again, but the prefill engine already published every aligned
+        chunk to the *shared* radix store, so this pass assembles the
+        prompt KV from the store and computes only the unaligned
+        remainder (O(cache_chunk), not O(prompt)) — which is exactly
+        why handed-off output is bit-identical to the single-engine
+        path: cached-vs-cold prefill identity holds by construction
+        (see repro.cache). Bypasses ``max_waiting`` like
+        ``adopt_paused``: the row was admitted once already."""
+        self._uid += 1
+        req.uid = self._uid
+        req.handoffs += 1
+        if self.tracer is not None and req.trace_id:
+            self.tracer.async_begin(req.trace_id, "queue", pid=self.pid,
+                                    uid=req.uid, handoff=True)
+            self._span_state[req.uid] = "queue"
+        if self.prefix_cache is not None:
+            req.expected_hit_tokens = self.prefix_cache.match_len(
+                req.prompt_tokens)
+        self.waiting.append(req)
+        return req.uid
+
+    def _extract_handoffs(self) -> None:
+        """Dismantle every primed gang into ``handoff_ready``: the
+        chunk KV lives in the shared store now (``prefill`` published
+        it), so the gang buffer goes straight back to the pool and only
+        the *requests* travel — no DecodeState crosses engines. The
+        prefill pass's nfe/sync deltas are attributed to each row first
+        (same bookkeeping as ``_harvest``)."""
+        for gang in self.gangs:
+            st = gang.state
+            dnfe = st.nfe - gang.nfe_seen
+            dsync = st.host_syncs - gang.syncs_seen
+            dlogit = st.logit_syncs - gang.logit_syncs_seen
+            for req in gang.requests:
+                if req is None:
+                    continue
+                req.nfe += dnfe
+                req.host_syncs += dsync
+                req.logit_syncs += dlogit
+                self._trace_handoff(req)
+                self.handoff_ready.append(req)
+            if st.cache is not None:
+                self.pool.release(st.batch, st.total_len, st.cache)
+                st.cache = None
+        self.gangs = []
+
+    def _trace_handoff(self, req: ServeRequest) -> None:
+        """Row leaves this engine for the decode pool: close whichever
+        span is open on this track (decode, normally) tagged
+        ``handoff=True``; the decode engine opens a fresh "queue" span
+        at adoption — same span-continuity contract as stealing."""
+        if self.tracer is None or not req.trace_id:
+            return
+        open_span = self._span_state.pop(req.uid, None)
+        if open_span in ("queue", "decode"):
+            self.tracer.async_end(req.trace_id, open_span, pid=self.pid,
+                                  handoff=True)
+        self.tracer.instant("handoff_out", pid=self.pid, uid=req.uid)
+
     # ------------------------------------------------------ merge
 
     def _merge_stragglers(self) -> None:
@@ -563,6 +674,16 @@ class BlockScheduler:
         advance every gang one block → harvest chunks/completions →
         compact + backfill."""
         chunks, completions = self._apply_cancels()
+        if self.prefill_only:
+            # prefill pool: admit (prefill publishes chunk KV to the
+            # shared store), dismantle into handoff_ready, then admit
+            # again so slots freed by the extraction fill this tick
+            self._admit()
+            self._extract_handoffs()
+            self._admit()
+            self._extract_handoffs()
+            self.last_decoded_rows = 0
+            return chunks, completions
         self._merge_stragglers()
         self._admit()
         # rows whose decode this tick actually pays for — sampled before
@@ -573,6 +694,7 @@ class BlockScheduler:
             t0_ns = time.perf_counter_ns()
             gang.decoder.decode_block(gang.state)
             t1_ns = time.perf_counter_ns()
+            self.decode_wall_s += (t1_ns - t0_ns) / 1e9
             self.compile_watch.observe(
                 self.jit_cache_size() - size0, (t1_ns - t0_ns) / 1e9,
                 "decode_block", tracer=self.tracer, pid=self.pid,
@@ -636,9 +758,11 @@ class BlockScheduler:
                         # it (its own chunks are usually still in the
                         # store, so this is O(tail), not O(prompt))
                         decoder.prime_prompt_kv(state)
+                t0 = time.perf_counter()
                 self.compile_watch.watched(
                     _resume, self.jit_cache_size, "resume",
                     tracer=self.tracer, pid=self.pid)
+                self.prefill_wall_s += time.perf_counter() - t0
             if req.admit_time < 0:   # resume keeps the first admission
                 req.admit_time = time.perf_counter()
             self._trace_admit(req)
@@ -734,13 +858,23 @@ class BlockScheduler:
                       prompt_len=P):
                 return decoder.prefill(prompts, cache=cache)
 
+        t0 = time.perf_counter()
         state = self.compile_watch.watched(
             _build, self.jit_cache_size, "prefill",
             tracer=self.tracer, pid=self.pid)
         now = time.perf_counter()
+        self.prefill_wall_s += now - t0
         for i, r in enumerate(batch_reqs):
-            r.admit_time = now
-            if state.prefix_hit_tokens is not None:
+            if r.admit_time < 0:
+                # a handed-off row keeps its first (prefill-pool)
+                # admission stamp, like a resumed row does — queue_s
+                # measures time to first admission, not handoff wait
+                r.admit_time = now
+            if state.prefix_hit_tokens is not None and r.handoffs == 0:
+                # a handed-off row's decode-pool prefill hits the store
+                # by construction (the prefill pool just published its
+                # chunks); keep the prefill engine's number — it is the
+                # one that measures genuine cross-request reuse
                 r.cache_hit_tokens = int(state.prefix_hit_tokens[i])
             self._trace_admit(r)
         rows: List[Optional[ServeRequest]] = \
@@ -783,6 +917,7 @@ class BlockScheduler:
             prompt_tokens=req.prompt_tokens,
             commit_conf=conf,
             stolen=req.stolen > 0,
+            handed_off=req.handoffs > 0,
             early_exited=req.blocks_decoded * K < req.gen_len)
 
     def _harvest(self, gang: Gang, dnfe: int, dsync: int = 0,

@@ -35,6 +35,9 @@ class ServeRequest:
     trace_id: str = ""                 # repro.obs correlation id ("" = off)
     stolen: int = 0                    # times adopted mid-decode by another
                                        # engine (adopt_paused)
+    handoffs: int = 0                  # times migrated prefill→decode pool
+                                       # (disaggregated serving; KV travels
+                                       # through the shared radix store)
     commit_conf: list = dataclasses.field(default_factory=list)
                                        # per harvested block: (K,) float32
                                        # commit-time confidences for this
@@ -92,6 +95,8 @@ class Completion:
                                        # (n_blocks*K,) float32 commit-time
                                        # confidences (untrimmed gen axis)
     stolen: bool = False               # decoded partly on an adopting engine
+    handed_off: bool = False           # primed on a prefill-pool engine,
+                                       # decoded on a decode-pool engine
     early_exited: bool = False         # an EOS block skipped later blocks
 
     @property
