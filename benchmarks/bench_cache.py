@@ -27,7 +27,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 
 import numpy as np
 
-from common import BLOCK, bench_model, shared_prefix_workload
+from common import BLOCK, append_history, bench_model, shared_prefix_workload
 from repro.core.decoder import DecodeConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving import ContinuousEngine
@@ -124,6 +124,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")
+    append_history(args.out, result)
 
 
 if __name__ == "__main__":

@@ -37,7 +37,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 import numpy as np
 
 from bench_serving import GEN_LEN, ragged_model, ragged_workload
-from common import BLOCK
+from common import BLOCK, append_history
 from repro.core.decoder import METHODS, DecodeConfig, DiffusionDecoder
 from repro.serving import ContinuousEngine, ServeMetrics
 
@@ -156,6 +156,7 @@ def main():
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
+    append_history(args.out, rec)
     print(f"\ndecode,geomean_speedup={rec['geomean_speedup']:.2f}x,"
           f"fused_logit_copies={rec['fused_logit_copies_total']}")
 

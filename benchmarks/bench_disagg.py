@@ -47,6 +47,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from common import append_history
+
 WORKLOAD_SEED = 3            # params + workload PRNG: one knob, recorded
 STREAM_TOKENS = 16           # stream decode length (two 8-token blocks)
 STORM_TOKENS = 8             # storm rows decode one block: prefill-heavy
@@ -381,6 +383,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {args.out}")
+    append_history(args.out, doc)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import append_history, emit
 from repro.kernels import ref
 from repro.kernels.ops import block_attention, confidence_argmax
 
@@ -30,6 +30,7 @@ def _time(f, n=3):
 
 def main():
     key = jax.random.PRNGKey(0)
+    history = {}
     for (B, Sq, Skv, H, Hkv, D) in SHAPES:
         ks = jax.random.split(key, 3)
         q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32)
@@ -45,11 +46,15 @@ def main():
         tile_vmem = (128 * D + 2 * 128 * D + 128 * D) * 4
         emit(f"bench_kernels/attn_B{B}_Sq{Sq}_Skv{Skv}", t_ref * 1e6,
              f"flops={flops:.3g};tile_vmem_bytes={tile_vmem};ref_path=jnp")
+        history[f"attn_B{B}_Sq{Sq}_Skv{Skv}_us"] = t_ref * 1e6
     for (N, V) in [(129, 50304), (129, 256000), (1024, 151936)]:
         logits = jax.random.normal(key, (N, V), jnp.float32)
         t_ref = _time(lambda: jax.jit(ref.confidence_argmax_ref)(logits))
         emit(f"bench_kernels/conf_N{N}_V{V}", t_ref * 1e6,
              f"bytes_read={N*V*4};fused_writes={N*8}")
+        history[f"conf_N{N}_V{V}_us"] = t_ref * 1e6
+    # no JSON output file — the history record is the persistent trail
+    append_history("BENCH_kernels.json", history)
 
 
 if __name__ == "__main__":

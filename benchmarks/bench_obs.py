@@ -24,6 +24,14 @@ Two sections, one JSON document (the PR's acceptance evidence):
   TTFB p50 are each within 5% of audit-off, ``host_syncs_per_block``
   stays exactly 1.0, at least one completion was actually re-decoded
   and compared, and zero divergences were reported.
+* **recorder overhead** — the closed-loop wave again, with the
+  time-series ``MetricsRecorder`` off then on at a fast sampling
+  interval *and* a live console client hammering ``/debug/timeline``
+  + ``/console`` for the duration (the dashboard's polling load is
+  part of what is being priced). Asserts recorder-on throughput is
+  within 5% of recorder-off, ``host_syncs_per_block`` stays exactly
+  1.0, samples were actually taken, and every timeline poll returned
+  parseable JSON.
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 from bench_decode import run_engine
 from bench_serving import GEN_LEN, ragged_model, ragged_workload
 from bench_server import build_frontend, closed_loop
-from common import BLOCK
+from common import BLOCK, append_history
 from repro.core.decoder import DecodeConfig
 from repro.obs.trace import Tracer, request_tree
 from repro.server import client as C
@@ -199,6 +207,96 @@ def bench_audit(args):
     return rec
 
 
+async def _recorder_wave(args, enabled):
+    """One warmup + one timed closed-loop wave; ``enabled`` attaches a
+    ``MetricsRecorder`` at a fast sampling interval (20 Hz — an order
+    of magnitude hotter than the 0.5 s serving default, so the bench
+    bounds a worst case) and runs a console-poller task issuing
+    ``/debug/timeline`` + ``/console`` reads throughout the wave."""
+    frontend, eng = build_frontend(args.max_slots, max_pending=32)
+    if enabled:
+        from repro.obs.series import MetricsRecorder
+        frontend.loop.recorder = MetricsRecorder(
+            eng, interval_s=0.05, loop=frontend.loop)
+    await frontend.start()
+    host, port = frontend.host, frontend.port
+    work = ragged_workload(max(8, args.n))
+    await closed_loop(host, port, args.clients, 2, work)
+    stop = asyncio.Event()
+    polls = {"n": 0}
+
+    async def console_poller():
+        while not stop.is_set():
+            st, _, body = await C.request(
+                host, port, "GET", "/debug/timeline?window=30&step=1")
+            assert st == 200, st
+            doc = json.loads(body)
+            assert doc["engines_reporting"] >= 1, doc
+            st, _, page = await C.request(host, port, "GET", "/console")
+            assert st == 200 and b"<!doctype html>" in page.lower()
+            polls["n"] += 1
+            try:
+                await asyncio.wait_for(stop.wait(), 0.1)
+            except asyncio.TimeoutError:
+                pass
+
+    poller = asyncio.create_task(console_poller()) if enabled else None
+    closed = await closed_loop(host, port, args.clients,
+                               args.per_client, work)
+    if poller is not None:
+        stop.set()
+        await poller
+    closed["host_syncs_per_block"] = \
+        eng.metrics.snapshot()["host_syncs_per_block"]
+    if enabled:
+        closed["recorder"] = frontend.loop.recorder.stats()
+        closed["timeline_polls"] = polls["n"]
+    await frontend.shutdown(drain=True)
+    return closed
+
+
+def bench_recorder(args):
+    recs = {False: [], True: []}
+    for rep in range(args.reps):
+        modes = (False, True) if rep % 2 == 0 else (True, False)
+        for m in modes:
+            recs[m].append(asyncio.run(_recorder_wave(args, m)))
+    # best-of per metric per mode, same rationale as bench_audit
+    best = {m: {"throughput_tok_s":
+                max(r["throughput_tok_s"] for r in rows),
+                "ttfb_p50_s": min(r["ttfb_p50_s"] for r in rows),
+                "host_syncs_per_block":
+                max(r["host_syncs_per_block"] for r in rows)}
+            for m, rows in recs.items()}
+    tok_over = 1.0 - (best[True]["throughput_tok_s"]
+                      / max(best[False]["throughput_tok_s"], 1e-9))
+    rstats = recs[True][-1]["recorder"]
+    rec = {
+        "recorder_off": best[False],
+        "recorder_on": best[True],
+        "throughput_overhead_frac": round(tok_over, 4),
+        "tolerance_frac": args.tolerance,
+        "reps": args.reps,
+        "within_tolerance": tok_over <= args.tolerance,
+        "host_syncs_per_block":
+            best[True]["host_syncs_per_block"],
+        "host_syncs_per_block_unchanged":
+            best[True]["host_syncs_per_block"]
+            == best[False]["host_syncs_per_block"],
+        "recorder_samples": rstats["samples"],
+        "recorder_dropped": rstats["dropped"],
+        "recorder_errors": rstats["errors"],
+        "timeline_polls": recs[True][-1]["timeline_polls"],
+    }
+    print(f"recorder overhead: off="
+          f"{best[False]['throughput_tok_s']:.1f} tok/s on="
+          f"{best[True]['throughput_tok_s']:.1f} tok/s "
+          f"({tok_over * 100:+.2f}%; tolerance "
+          f"{args.tolerance * 100:.0f}%)  samples={rstats['samples']} "
+          f"timeline_polls={rec['timeline_polls']}")
+    return rec
+
+
 async def bench_http_trace(args, trace_path):
     tracer = Tracer()
     frontend, eng = build_frontend(args.max_slots, max_pending=32,
@@ -260,6 +358,7 @@ def main():
     http = asyncio.run(bench_http_trace(args, trace_path))
 
     audit = bench_audit(args)
+    recorder = bench_recorder(args)
 
     doc = {"config": {"n": args.n, "clients": args.clients,
                       "per_client": args.per_client,
@@ -267,10 +366,12 @@ def main():
                       "gen_len": GEN_LEN, "block": BLOCK},
            "decode_overhead": overhead,
            "http_trace": http,
-           "audit_overhead": audit}
+           "audit_overhead": audit,
+           "recorder_overhead": recorder}
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {args.out}")
+    append_history(args.out, doc)
     if not overhead["within_tolerance"]:
         raise SystemExit(
             f"tracer overhead {overhead['throughput_overhead_frac']:.2%}"
@@ -291,6 +392,20 @@ def main():
         raise SystemExit(f"clean audit wave reported divergences/errors: "
                          f"{audit['audit_divergences']} / "
                          f"{audit['audit_errors']}")
+    if not recorder["within_tolerance"]:
+        raise SystemExit(
+            f"recorder overhead "
+            f"{recorder['throughput_overhead_frac']:.2%} exceeds "
+            f"{args.tolerance:.0%}")
+    if recorder["host_syncs_per_block"] != 1.0:
+        raise SystemExit("recorder changed host_syncs_per_block from 1.0")
+    if recorder["recorder_samples"] < 1 or recorder["timeline_polls"] < 1:
+        raise SystemExit("recorder wave took no samples or served no "
+                         "timeline polls (vacuous)")
+    if recorder["recorder_errors"]:
+        raise SystemExit(
+            f"recorder reported {recorder['recorder_errors']} "
+            "internal sampling errors")
 
 
 if __name__ == "__main__":

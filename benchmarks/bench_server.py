@@ -39,7 +39,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 import numpy as np
 
 from bench_serving import GEN_LEN, ragged_model, ragged_workload
-from common import shared_prefix_workload
+from common import append_history, shared_prefix_workload
 from repro.core.decoder import DecodeConfig
 from repro.data.tokenizer import ByteTokenizer
 from repro.serving import ContinuousEngine, percentile
@@ -299,6 +299,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")
+    append_history(args.out, result)
 
 
 if __name__ == "__main__":

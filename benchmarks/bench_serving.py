@@ -33,7 +33,7 @@ sys.path.insert(0, os.path.dirname(__file__))
 import jax
 import numpy as np
 
-from common import BLOCK
+from common import BLOCK, append_history
 from repro.core.decoder import DecodeConfig, DiffusionDecoder
 from repro.core.engine import ServingEngine
 from repro.data.tokenizer import ByteTokenizer
@@ -180,6 +180,7 @@ def main():
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=1)
+    append_history(args.out, rec)
     print(json.dumps(rec, indent=1))
     print(f"\nserving,{1e6 * cont['wall_s'] / max(args.n, 1):.1f},"
           f"speedup={rec['speedup_throughput']:.2f}x "

@@ -47,6 +47,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from common import append_history
+
 HOST_DEVICES = 8
 WORKLOAD_SEED = 3          # also the params PRNG seed: one knob, recorded
 
@@ -295,6 +297,7 @@ def main():
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {args.out}")
+    append_history(args.out, doc)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,15 @@
 """Shared benchmark harness: a trained tiny diffusion LM (cached on
 disk) + timing helpers. Every benchmark prints ``name,us_per_call,derived``
-CSV rows (benchmarks/run.py aggregates)."""
+CSV rows (benchmarks/run.py aggregates), and every JSON-emitting bench
+appends one record per run to the append-only cross-PR perf history
+(``results/history/<bench>.jsonl`` — see ``append_history``)."""
 from __future__ import annotations
 
+import hashlib
+import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -61,6 +67,74 @@ def run_method(cfg, params, prompts, samples, tok, *, method,
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# --------------------------------------------------------------------
+# cross-PR perf history: results/BENCH_*.json files are overwritten in
+# place every run, so the trajectory across PRs is invisible and
+# bench_gate.py can only compare against git:HEAD. Each bench run also
+# appends one compact record here; scripts/perf_report.py renders the
+# trajectory and bench_gate.py runs EWMA drift rules over it.
+
+HISTORY_DIR = os.environ.get("REPRO_HISTORY_DIR", "results/history")
+HISTORY_MAX_METRICS = 500      # runaway-nesting backstop per record
+
+
+def _git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except Exception:
+        return ""
+
+
+def _numeric_leaves(doc, prefix=""):
+    """Flatten nested dicts to dotted-path numeric leaves — the same
+    addressing scheme scripts/bench_gate.py matches its rules against,
+    so a history record and a fresh BENCH doc name a metric
+    identically."""
+    for key in sorted(doc):
+        val = doc[key]
+        path = f"{prefix}.{key}" if prefix else str(key)
+        if isinstance(val, dict):
+            yield from _numeric_leaves(val, path)
+        elif isinstance(val, (bool, int, float)):
+            yield path, float(val)
+
+
+def append_history(out_path: str, doc: dict, history_dir=None) -> str:
+    """Append one perf-history record for this bench run. The history
+    file is named after the output file's stem (``BENCH_obs`` vs
+    ``BENCH_obs_quick`` stay separate series — quick and full waves are
+    not comparable), the config hash is over the exact CLI invocation
+    (same flags = same series), and metrics are every numeric leaf of
+    the result doc under dotted paths. Append-only JSONL: a crashed run
+    corrupts at most its own last line, never history."""
+    bench = os.path.splitext(os.path.basename(out_path))[0]
+    hdir = history_dir or HISTORY_DIR
+    os.makedirs(hdir, exist_ok=True)
+    argv = " ".join(sys.argv[1:])
+    metrics = {}
+    for path, val in _numeric_leaves(doc):
+        if len(metrics) >= HISTORY_MAX_METRICS:
+            break
+        metrics[path] = val
+    record = {
+        "bench": bench,
+        "commit": _git_commit(),
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "config_hash": hashlib.sha1(argv.encode()).hexdigest()[:12],
+        "argv": argv,
+        "metrics": metrics,
+    }
+    path = os.path.join(hdir, f"{bench}.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(record) + "\n")
+    print(f"history: appended {bench} -> {path}")
+    return path
 
 
 def shared_prefix_workload(n: int, *, templates: int = 4,

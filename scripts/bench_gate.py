@@ -26,6 +26,15 @@ benches' own ``within_tolerance`` verdicts, which embed the tight 5%
 overhead checks measured off/on within one process. Output is
 machine-readable JSON ({"pass": bool, "checks": [...]}) plus a
 human summary; exit status 0 iff every check passed.
+
+Trend rules (``--history``, default ``results/history``): alongside
+the pairwise git:HEAD comparison, headline metrics are also checked
+against an EWMA over the bench's append-only cross-PR history
+(``results/history/<stem>.jsonl``, written by ``benchmarks/common.
+append_history``). A single-PR ratio rule cannot see ten PRs each
+losing 4%; the EWMA can. Trend rules fire only once a series has
+``EWMA_MIN_RECORDS`` prior records, so young benches gate pairwise
+only.
 """
 from __future__ import annotations
 
@@ -63,6 +72,20 @@ RULES = [
     ("latency_p50_s", "max_ratio", 2.0),
     ("latency_p99_s", "max_ratio", 3.0),
 ]
+
+# EWMA drift rules over the cross-PR history. Tighter than the
+# pairwise ratios on purpose: the EWMA is a smoothed consensus of many
+# runs, so one noisy CI host moves it little, and slow multi-PR drift
+# accumulates into it until a fresh run trips the bound.
+TREND_RULES = [
+    ("throughput_tok_s", "ewma_min_ratio", 0.6),
+    ("goodput_tok_s", "ewma_min_ratio", 0.6),
+    ("ttfb_p50_s", "ewma_max_ratio", 1.8),
+    ("latency_p50_s", "ewma_max_ratio", 1.8),
+    ("throughput_overhead_frac", "ewma_max_abs_delta", 0.10),
+]
+EWMA_ALPHA = 0.3               # weight of the newest history record
+EWMA_MIN_RECORDS = 3           # don't trend-gate a young series
 
 
 def leaves(doc, prefix=""):
@@ -108,6 +131,78 @@ def check_pair(name, fresh_doc, base_doc):
     return out
 
 
+def trend_rule_for(key):
+    for name, rule, arg in TREND_RULES:
+        if fnmatch.fnmatch(key, name):
+            return rule, arg
+    return None, None
+
+
+def load_history(history_dir, name):
+    """Records from ``<history_dir>/<stem>.jsonl`` (``name`` is the
+    BENCH file name). Append-only JSONL: a torn final line from a
+    crashed run is skipped, earlier history is never at risk."""
+    stem = os.path.splitext(name)[0]
+    path = os.path.join(history_dir, f"{stem}.jsonl")
+    if not os.path.exists(path):
+        return []
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue               # torn tail line
+    return records
+
+
+def ewma(values, alpha=EWMA_ALPHA):
+    acc = values[0]
+    for v in values[1:]:
+        acc = alpha * v + (1 - alpha) * acc
+    return acc
+
+
+def check_trend(name, fresh_doc, records):
+    """EWMA drift checks: each headline leaf of the fresh doc vs the
+    exponentially weighted mean of the same dotted path across the
+    bench's history. The fresh run appends itself to history *before*
+    the gate runs, so a trailing record whose metrics equal the fresh
+    doc's is its own echo and is excluded — a run must not smooth the
+    baseline it is judged against."""
+    fresh_flat = {p: float(v) for p, _, v in leaves(fresh_doc)
+                  if isinstance(v, (int, float, bool))}
+    if records:
+        tail = records[-1].get("metrics") or {}
+        if tail and all(fresh_flat.get(k) == v for k, v in tail.items()):
+            records = records[:-1]
+    out = []
+    for path, key, v in leaves(fresh_doc):
+        rule, arg = trend_rule_for(key)
+        if rule is None or isinstance(v, bool) \
+                or not isinstance(v, (int, float)):
+            continue
+        series = [r["metrics"][path] for r in records
+                  if isinstance(r.get("metrics", {}).get(path),
+                                (int, float))]
+        if len(series) < EWMA_MIN_RECORDS:
+            continue
+        base = ewma(series)
+        if rule == "ewma_min_ratio":
+            ok = v >= base * arg
+        elif rule == "ewma_max_ratio":
+            ok = v <= base * arg
+        else:                          # ewma_max_abs_delta
+            ok = abs(v - base) <= arg
+        out.append({"file": name, "path": path, "rule": rule,
+                    "arg": arg, "baseline": round(base, 6), "fresh": v,
+                    "n_history": len(series), "ok": ok})
+    return out
+
+
 def load_baseline(spec, name):
     if spec.startswith("git:"):
         ref = spec[len("git:"):] or "HEAD"
@@ -134,6 +229,9 @@ def main():
                          "committed results/ tree at REF")
     ap.add_argument("--out", default="",
                     help="write the machine-readable verdict here")
+    ap.add_argument("--history", default="results/history",
+                    help="cross-PR perf-history dir for EWMA trend "
+                         "rules ('' disables trend checks)")
     args = ap.parse_args()
 
     fresh_files = sorted(glob.glob(os.path.join(args.fresh,
@@ -141,18 +239,24 @@ def main():
     if not fresh_files:
         print(f"bench_gate: no BENCH_*.json under {args.fresh}")
         return 2
-    checks, skipped = [], []
+    checks, skipped, trend_checks = [], [], []
     for path in fresh_files:
         name = os.path.basename(path)
         with open(path) as f:
             fresh_doc = json.load(f)
+        if args.history:
+            trend_checks.extend(check_trend(
+                name, fresh_doc, load_history(args.history, name)))
         base_doc = load_baseline(args.baseline, name)
         if base_doc is None:
             skipped.append(name)
             continue
         checks.extend(check_pair(name, fresh_doc, base_doc))
+    checks.extend(trend_checks)
     verdict = {"pass": all(c["ok"] for c in checks) and bool(checks),
                "baseline": args.baseline,
+               "history": args.history,
+               "trend_checks": len(trend_checks),
                "files": [os.path.basename(p) for p in fresh_files],
                "skipped_no_baseline": skipped,
                "checks": checks}
@@ -169,7 +273,8 @@ def main():
     for name in skipped:
         print(f"skip {name}: no baseline at {args.baseline}")
     print(f"bench_gate: {len(checks) - n_bad}/{len(checks)} checks "
-          f"passed over {len(fresh_files) - len(skipped)} file(s) "
+          f"passed ({len(trend_checks)} EWMA trend) over "
+          f"{len(fresh_files) - len(skipped)} file(s) "
           f"-> {'PASS' if verdict['pass'] else 'FAIL'}")
     return 0 if verdict["pass"] else 1
 

@@ -1,0 +1,264 @@
+"""Render the cross-PR perf trajectory to ``docs/PERF.md``.
+
+    PYTHONPATH=src python scripts/perf_report.py \
+        [--history results/history] [--out docs/PERF.md] \
+        [--html docs/PERF.html] [--check]
+
+Input is the append-only history written by ``benchmarks.common.
+append_history`` — one JSONL file per bench series under
+``results/history/``, one record per run (commit, timestamp, config
+hash, every numeric leaf of the result doc under its bench_gate dotted
+path). Output:
+
+* ``docs/PERF.md`` — per-bench tables of the headline metrics' recent
+  trajectory with unicode sparklines, newest run last, commits linked
+  by short hash so a regression is one ``git show`` away.
+* ``--html`` — optional standalone HTML with inline SVG sparklines
+  (zero external deps, same discipline as ``GET /console``).
+* ``--check`` — validate every history record against the schema
+  (required keys, metrics all numeric, parseable lines) and exit
+  non-zero on violations without writing anything. ``scripts/test.sh
+  gate`` runs this over the fresh records each gate pass.
+
+Headline selection: a curated key list first (throughput, latency,
+overhead verdict inputs), then whatever else the series carries, capped
+per bench so the report stays readable.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# dotted-leaf suffixes promoted to the top of each bench's table, in
+# this order; everything else is alphabetical below the fold
+HEADLINE_SUFFIXES = (
+    "throughput_tok_s", "goodput_tok_s", "tok_s",
+    "ttfb_p50_s", "ttfb_p99_s", "latency_p50_s", "latency_p99_s",
+    "host_syncs_per_block", "throughput_overhead_frac",
+    "geomean_speedup", "ttfb_speedup_p50", "hit_rate",
+)
+MAX_METRICS_PER_BENCH = 16
+MAX_RUNS_SHOWN = 12
+SPARK_CHARS = "▁▂▃▄▅▆▇█"
+
+REQUIRED_KEYS = ("bench", "commit", "ts", "config_hash", "metrics")
+
+
+def load_series(history_dir):
+    """{bench: [records]} for every ``*.jsonl`` under the history dir,
+    oldest first (file order — the files are append-only)."""
+    series = {}
+    for path in sorted(glob.glob(os.path.join(history_dir, "*.jsonl"))):
+        bench = os.path.splitext(os.path.basename(path))[0]
+        records = []
+        with open(path) as f:
+            for i, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    records.append((i, json.loads(line)))
+                except json.JSONDecodeError:
+                    records.append((i, None))    # torn/corrupt line
+        series[bench] = records
+    return series
+
+
+def check_schema(series) -> list:
+    """Schema violations as ``(file, line, problem)`` rows. A corrupt
+    *final* line is tolerated (a crashed run's torn tail is the
+    documented failure mode); anywhere else it is a violation."""
+    problems = []
+    for bench, records in series.items():
+        for idx, (lineno, rec) in enumerate(records):
+            where = f"{bench}.jsonl:{lineno}"
+            if rec is None:
+                if idx != len(records) - 1:
+                    problems.append((where, "unparseable non-final line"))
+                continue
+            for key in REQUIRED_KEYS:
+                if key not in rec:
+                    problems.append((where, f"missing key {key!r}"))
+            metrics = rec.get("metrics")
+            if not isinstance(metrics, dict) or not metrics:
+                problems.append((where, "metrics missing or empty"))
+                continue
+            for k, v in metrics.items():
+                if not isinstance(v, (int, float)) \
+                        or isinstance(v, bool):
+                    problems.append(
+                        (where, f"non-numeric metric {k!r}: {v!r}"))
+    return problems
+
+
+def select_metrics(records):
+    """Ordered metric paths for one bench: headline suffixes first,
+    then alphabetical, capped."""
+    seen = {}
+    for _, rec in records:
+        if rec:
+            for k in rec.get("metrics", {}):
+                seen.setdefault(k, True)
+    def rank(path):
+        leaf = path.rsplit(".", 1)[-1]
+        try:
+            return (0, HEADLINE_SUFFIXES.index(leaf), path)
+        except ValueError:
+            return (1, 0, path)
+    return sorted(seen, key=rank)[:MAX_METRICS_PER_BENCH]
+
+
+def values_for(records, path):
+    out = []
+    for _, rec in records:
+        v = (rec or {}).get("metrics", {}).get(path)
+        out.append(float(v) if isinstance(v, (int, float))
+                   and not isinstance(v, bool) else None)
+    return out
+
+
+def sparkline(vals) -> str:
+    nums = [v for v in vals if v is not None]
+    if not nums:
+        return ""
+    lo, hi = min(nums), max(nums)
+    span = hi - lo
+    out = []
+    for v in vals:
+        if v is None:
+            out.append("·")
+        elif span <= 0:
+            out.append(SPARK_CHARS[3])
+        else:
+            i = int((v - lo) / span * (len(SPARK_CHARS) - 1))
+            out.append(SPARK_CHARS[i])
+    return "".join(out)
+
+
+def fmt(v) -> str:
+    if v is None:
+        return "–"
+    if v == int(v) and abs(v) < 1e9:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def render_md(series) -> str:
+    lines = ["# Perf trajectory", "",
+             "Cross-PR benchmark history, one series per "
+             "`results/history/*.jsonl` (appended by every bench run; "
+             "see `benchmarks/common.append_history`). Regenerate with "
+             "`python scripts/perf_report.py`. Sparklines span the "
+             "series min→max; the table shows the most recent "
+             f"{MAX_RUNS_SHOWN} runs, newest last.", ""]
+    for bench in sorted(series):
+        records = [(ln, r) for ln, r in series[bench] if r]
+        if not records:
+            continue
+        shown = records[-MAX_RUNS_SHOWN:]
+        lines.append(f"## {bench}")
+        lines.append("")
+        commits = [r.get("commit") or "?" for _, r in shown]
+        hashes = [r.get("config_hash", "")[:6] for _, r in shown]
+        lines.append(f"{len(records)} run(s) · commits "
+                     f"{commits[0]} → {commits[-1]} · config "
+                     + ("stable" if len(set(hashes)) == 1
+                        else f"{len(set(hashes))} variants"))
+        lines.append("")
+        lines.append("| metric | trend | " +
+                     " | ".join(c or "?" for c in commits) + " |")
+        lines.append("|---|---|" + "---|" * len(shown))
+        for path in select_metrics(records):
+            vals = values_for(records, path)
+            recent = vals[-len(shown):]
+            lines.append(f"| `{path}` | {sparkline(vals)} | "
+                         + " | ".join(fmt(v) for v in recent) + " |")
+        lines.append("")
+    return "\n".join(lines) + "\n"
+
+
+def _svg_spark(vals, w=240, h=36) -> str:
+    nums = [(i, v) for i, v in enumerate(vals) if v is not None]
+    if not nums:
+        return f'<svg width="{w}" height="{h}"></svg>'
+    lo = min(v for _, v in nums)
+    hi = max(v for _, v in nums)
+    span = (hi - lo) or 1.0
+    n = max(len(vals) - 1, 1)
+    pts = " ".join(
+        f"{2 + i * (w - 4) / n:.1f},"
+        f"{h - 4 - (v - lo) / span * (h - 8):.1f}" for i, v in nums)
+    return (f'<svg width="{w}" height="{h}">'
+            f'<polyline fill="none" stroke="#2f81f7" stroke-width="1.5" '
+            f'points="{pts}"/></svg>')
+
+
+def render_html(series) -> str:
+    rows = ["<!doctype html><meta charset='utf-8'>"
+            "<title>repro perf trajectory</title>"
+            "<style>body{font:14px ui-monospace,monospace;margin:2em;"
+            "color:#222}table{border-collapse:collapse}"
+            "td,th{border:1px solid #ddd;padding:4px 8px;"
+            "text-align:right}td:first-child{text-align:left}</style>",
+            "<h1>repro perf trajectory</h1>"]
+    for bench in sorted(series):
+        records = [(ln, r) for ln, r in series[bench] if r]
+        if not records:
+            continue
+        rows.append(f"<h2>{bench}</h2><table>"
+                    "<tr><th>metric</th><th>trend</th>"
+                    "<th>latest</th></tr>")
+        for path in select_metrics(records):
+            vals = values_for(records, path)
+            last = next((v for v in reversed(vals) if v is not None),
+                        None)
+            rows.append(f"<tr><td>{path}</td><td>{_svg_spark(vals)}"
+                        f"</td><td>{fmt(last)}</td></tr>")
+        rows.append("</table>")
+    return "\n".join(rows) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--history", default="results/history")
+    ap.add_argument("--out", default="docs/PERF.md")
+    ap.add_argument("--html", default="",
+                    help="also write a standalone HTML report here")
+    ap.add_argument("--check", action="store_true",
+                    help="validate history-record schema only; write "
+                         "nothing, exit 1 on violations")
+    args = ap.parse_args()
+
+    series = load_series(args.history)
+    if not series:
+        print(f"perf_report: no *.jsonl under {args.history}"
+              + (" (ok)" if args.check else ""))
+        return 0 if args.check else 1
+
+    if args.check:
+        problems = check_schema(series)
+        for where, what in problems:
+            print(f"BAD {where}: {what}")
+        n = sum(len([r for _, r in recs if r])
+                for recs in series.values())
+        print(f"perf_report --check: {len(series)} series, {n} "
+              f"record(s), {len(problems)} problem(s)")
+        return 1 if problems else 0
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(render_md(series))
+    print(f"wrote {args.out}")
+    if args.html:
+        os.makedirs(os.path.dirname(args.html) or ".", exist_ok=True)
+        with open(args.html, "w") as f:
+            f.write(render_html(series))
+        print(f"wrote {args.html}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,9 @@
 #                                # a quick bench_cache run
 #   scripts/test.sh obs          # observability suite (tracer, span
 #                                # trees, telemetry, histograms, logs)
+#   scripts/test.sh series       # time-series suite (metrics recorder,
+#                                # /debug/timeline, /console, fleet
+#                                # fan-in, Prometheus exposition)
 #   scripts/test.sh audit        # quality-audit suite (shadow auditor,
 #                                # fault injection, SLO watchdog,
 #                                # flight recorder, /debug routes)
@@ -25,8 +28,9 @@
 #                                # baseline (scripts/bench_gate.py)
 #   scripts/test.sh lint         # compileall + import-cycle smoke +
 #                                # no-print policy + raise discipline
-#                                # in observability hot paths (also
-#                                # runs at the top of tier-1)
+#                                # in observability hot paths + metrics
+#                                # doc drift check (also runs at the
+#                                # top of tier-1)
 #   scripts/test.sh all          # suite + smoke
 #
 # Tests run on the single real CPU device; the dry-run subprocesses set
@@ -138,7 +142,8 @@ EOF
 # __post_init__ is config validation at construction time, before any
 # hot path exists).
 import ast, pathlib, sys
-FILES = ("src/repro/obs/trace.py", "src/repro/obs/audit.py")
+FILES = ("src/repro/obs/trace.py", "src/repro/obs/audit.py",
+         "src/repro/obs/series.py")
 ALLOWED = {"request_tree", "__post_init__"}
 bad = []
 for fname in FILES:
@@ -160,6 +165,9 @@ if bad:
 print(f"lint: no raise outside {sorted(ALLOWED)} in "
       f"{len(FILES)} obs hot-path modules")
 EOF
+    # docs/METRICS.md must match a fresh /metrics rendering (every
+    # repro_* literal in the server source covered and documented)
+    python scripts/gen_metrics_doc.py --check
 }
 
 run_suite() {
@@ -206,6 +214,14 @@ run_obs() {
     python benchmarks/bench_obs.py --quick --out results/BENCH_obs_quick.json
 }
 
+run_series() {
+    # time-series recorder suite: ring sampling + delta reconstruction,
+    # fleet fan-in, /debug/timeline + /console round trips, strict
+    # Prometheus-exposition parse of /metrics, writer-vs-reader
+    # concurrency hammer
+    python -m pytest -x -q tests/test_series.py
+}
+
 run_audit() {
     # quality-audit suite: shadow-auditor clean matrix + fault
     # injection (flipped token, poisoned cache chunk), SLO watchdog,
@@ -228,6 +244,9 @@ run_gate() {
         --out "$fresh/BENCH_disagg_quick.json"
     python scripts/bench_gate.py --fresh "$fresh" --baseline git:HEAD \
         --out results/GATE.json
+    # the benches above each appended a history record; validate the
+    # whole history tree against the record schema
+    python scripts/perf_report.py --check
 }
 
 run_disagg() {
@@ -274,6 +293,7 @@ case "${1:-suite}" in
     disagg)  run_disagg ;;
     cache)   run_cache ;;
     obs)     run_obs ;;
+    series)  run_series ;;
     audit)   run_audit ;;
     gate)    run_gate ;;
     lint)    run_lint ;;

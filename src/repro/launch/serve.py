@@ -194,6 +194,15 @@ def main():
                          "divergence, crash, or GET /debug/flight, dump "
                          "trace ring buffers + metrics snapshot + "
                          "scheduler/gang state under DIR")
+    ap.add_argument("--metrics-log", default="", metavar="PATH",
+                    help="append every time-series recorder sample "
+                         "(repro.obs.series) as a JSON line to PATH "
+                         "(HTTP mode; the in-memory ring behind "
+                         "/debug/timeline and /console is always on)")
+    ap.add_argument("--metrics-interval-s", type=float, default=0.5,
+                    metavar="S",
+                    help="recorder sampling interval per engine "
+                         "(0 disables the recorders entirely)")
     ap.add_argument("--slo-ttfb-p50-ms", type=float, default=0.0,
                     help="SLO watchdog: rolling TTFB p50 target in ms "
                          "(breach dumps a flight recording; 0 = off)")
@@ -250,7 +259,8 @@ def main():
         for flag, on in (("--audit-rate", args.audit_rate > 0),
                          ("--flight-dir", bool(args.flight_dir)),
                          ("--slo-*", any(slo_targets.values())),
-                         ("--trace-flush-s", args.trace_flush_s > 0)):
+                         ("--trace-flush-s", args.trace_flush_s > 0),
+                         ("--metrics-log", bool(args.metrics_log))):
             if on:
                 raise SystemExit(f"{flag} needs --http (the audit/SLO/"
                                  "flight layer rides the HTTP serving "
@@ -438,7 +448,9 @@ def main():
                      host=args.http_host, port=args.http,
                      max_pending=args.max_pending, tracer=tracer,
                      steal=not args.no_steal, audit=audit,
-                     watchdog=watchdog, flight=flight, roles=roles)
+                     watchdog=watchdog, flight=flight, roles=roles,
+                     metrics_interval_s=args.metrics_interval_s,
+                     metrics_log=args.metrics_log or None)
         finally:
             if flusher is not None:
                 flusher.stop(final_flush=False)

@@ -27,6 +27,13 @@ Layering (threaded through every serving layer):
                  regret counters, rolling SLO watchdog, and a
                  flight-recorder post-mortem dump
                  (``--flight-dir`` / ``GET /debug/flight``).
+    series     — fleet time-series: a per-engine ``MetricsRecorder``
+                 sampling counter deltas on the decode-thread cadence
+                 into a bounded ring, derived rate series (tok/s, rps,
+                 goodput, busy fractions — the pool-sizing signal),
+                 fleet/pool fan-in for ``GET /debug/timeline`` and the
+                 ``GET /console`` page, optional ``--metrics-log``
+                 JSONL persistence.
 
 Everything is optional: a ``tracer=None`` (the default everywhere)
 costs one ``is None`` test per call site, and telemetry rides inside
@@ -40,6 +47,8 @@ from repro.obs.compile import (CompileWatch, persistent_cache_counters,
 from repro.obs.log import get_logger, setup_logging
 from repro.obs.metrics import Histogram, device_memory_stats
 from repro.obs.profiler import BlockProfiler
+from repro.obs.series import (JsonlSink, MetricsRecorder, fleet_series,
+                              timeline_doc)
 from repro.obs.telemetry import (CONF_BUCKETS, BlockStats,
                                  TelemetryAggregator)
 from repro.obs.trace import Tracer, TraceFlusher, span
@@ -52,4 +61,5 @@ __all__ = [
     "get_logger", "setup_logging",
     "AuditConfig", "AuditResult", "ShadowAuditor", "SLOWatchdog",
     "FlightRecorder",
+    "MetricsRecorder", "JsonlSink", "fleet_series", "timeline_doc",
 ]

@@ -574,5 +574,11 @@ class FlightRecorder:
             json.dump({"meta": meta,
                        "schedulers": state.get("schedulers", []),
                        "loops": state.get("loops", [])}, f, indent=1)
+        if state.get("timeline") is not None:
+            # repro.obs.series: the breach window's rate series — the
+            # minutes leading up to the trigger, not just its instant
+            with open(os.path.join(path, "timeline.json"), "w") as f:
+                json.dump({"meta": meta,
+                           "timeline": state["timeline"]}, f, indent=1)
         log.warning("flight dump written: %s (reason=%s)", path, reason)
         return path

@@ -15,6 +15,13 @@ Routes:
     GET  /debug/flight     trigger a flight-recorder dump (trace ring
                            buffers + metrics + scheduler state); 503
                            when no ``--flight-dir`` is configured.
+    GET  /debug/timeline   windowed time-series JSON per engine plus
+                           fleet/pool aggregates (repro.obs.series);
+                           ``?window=`` seconds of history at
+                           ``?step=``-second buckets.
+    GET  /console          self-contained fleet ops console (static
+                           HTML, zero external deps) polling
+                           /debug/timeline for live sparklines.
 
 Request lifecycle guarantees:
 * admission is bounded — a full queue answers ``429`` with
@@ -204,6 +211,24 @@ class HttpFrontend:
                 writer.write(wire.response(
                     200, {"path": path, "dumps": self.flight.dumps,
                           "suppressed": self.flight.suppressed},
+                    keep_alive=keep))
+        elif req.path == "/debug/timeline":
+            if req.method != "GET":
+                writer.write(wire.error_response(405, "use GET",
+                                                 keep_alive=keep))
+            else:
+                writer.write(wire.response(200, self._timeline(req),
+                                           keep_alive=keep))
+        elif req.path == "/console":
+            if req.method != "GET":
+                writer.write(wire.error_response(405, "use GET",
+                                                 keep_alive=keep))
+            else:
+                from repro.server.console import CONSOLE_HTML
+                writer.write(wire.response(
+                    200, CONSOLE_HTML,
+                    content_type="text/html; charset=utf-8",
+                    extra_headers={"Cache-Control": "no-cache"},
                     keep_alive=keep))
         elif req.path == "/v1/completions":
             if req.method != "POST":
@@ -424,6 +449,26 @@ class HttpFrontend:
         if self.tracer is not None:
             doc["trace_drops"] = self.tracer.dropped
         return doc
+
+    def _timeline(self, req: wire.HttpRequest = None) -> dict:
+        """Windowed rate series per engine + fleet/pool aggregates
+        (repro.obs.series). The recorder rings are written by the
+        decode threads and snapshotted here without a lock — same
+        GIL-atomic deque contract as the tracer."""
+        from repro.obs.series import timeline_doc
+        params = req.params() if req is not None else {}
+
+        def num(key, default, lo, hi):
+            try:
+                return min(max(float(params.get(key, default)), lo), hi)
+            except (TypeError, ValueError):
+                return default
+
+        window = num("window", 120.0, 1.0, 3600.0)
+        step = num("step", 5.0, 0.1, window)
+        loops = getattr(self.loop, "loops", None) or [self.loop]
+        return timeline_doc(loops, window_s=window, step_s=step,
+                            watchdog=self.watchdog)
 
     def _metrics_text(self) -> str:
         """Prometheus text. Top-level series aggregate over every
@@ -678,6 +723,29 @@ class HttpFrontend:
                  "Flight-recorder dumps written.")
             emit("repro_flight_suppressed_total", self.flight.suppressed,
                  "counter", "Flight dumps suppressed by debounce/cap.")
+        # time-series recorder (repro.obs.series) — emitted whenever any
+        # loop carries a MetricsRecorder
+        loops_all = getattr(self.loop, "loops", None) or [self.loop]
+        recorders = [lp.recorder for lp in loops_all
+                     if getattr(lp, "recorder", None) is not None]
+        if recorders:
+            rstats = [r.stats() for r in recorders]
+            emit("repro_series_samples_total",
+                 sum(s["samples"] for s in rstats), "counter",
+                 "Time-series samples taken across engine recorders.")
+            emit("repro_series_dropped_total",
+                 sum(s["dropped"] for s in rstats), "counter",
+                 "Samples evicted from full recorder rings.")
+            emit("repro_series_errors_total",
+                 sum(s["errors"] for s in rstats), "counter",
+                 "Recorder samples that failed internally (logged and "
+                 "dropped).")
+            emit("repro_series_ring_bytes",
+                 sum(s["ring_bytes"] for s in rstats), "gauge",
+                 "Estimated bytes resident in recorder rings.")
+            emit("repro_series_log_lines_total",
+                 max(s["log_lines"] for s in rstats), "counter",
+                 "JSONL lines written to --metrics-log (shared sink).")
         if len(self.engines) > 1:
             for name, key, mtype, help_text, fmt in (
                     ("requests_total", "requests", "counter",
@@ -761,11 +829,18 @@ def _flight_state(loops, watchdog=None):
              "loops": [lp.debug_vars() for lp in loops]}
     if watchdog is not None:
         state["slo"] = watchdog.current()
+    if any(getattr(lp, "recorder", None) is not None for lp in loops):
+        # the breach window's time series rides along in the dump
+        # (timeline.json) so a post-mortem sees the minutes *before*
+        # the trigger, not just the instant of it
+        from repro.obs.series import timeline_doc
+        state["timeline"] = timeline_doc(loops, watchdog=watchdog)
     return state
 
 
 def _front(engines, max_pending: int, tracer=None, steal: bool = True,
-           audit=None, watchdog=None, flight=None, roles=None):
+           audit=None, watchdog=None, flight=None, roles=None,
+           metrics_interval_s: float = 0.5, metrics_log=None):
     """One EngineLoop per engine; >1 engine routes through
     ``EngineRouter`` (least-loaded by live rows, block-boundary work
     stealing unless ``steal=False``). ``tracer`` claims a named track
@@ -773,7 +848,10 @@ def _front(engines, max_pending: int, tracer=None, steal: bool = True,
     ``ShadowAuditor`` per engine; ``watchdog``/``flight`` wire SLO
     observation and crash/breach dumps into every loop. ``roles`` (one
     entry per engine, ``"prefill"``/``"decode"``/``None``) builds a
-    disaggregated fleet — the router partitions pools by loop role."""
+    disaggregated fleet — the router partitions pools by loop role.
+    Every loop gets a ``MetricsRecorder`` (``metrics_interval_s`` <= 0
+    disables); ``metrics_log`` additionally persists each sample as a
+    JSONL line through one shared sink."""
     engines = engines if isinstance(engines, (list, tuple)) else [engines]
     loops = [EngineLoop(e, max_pending=max_pending, tracer=tracer,
                         index=i, role=roles[i] if roles else None)
@@ -783,9 +861,19 @@ def _front(engines, max_pending: int, tracer=None, steal: bool = True,
         for e in engines:
             e.attach_auditor(ShadowAuditor(e, audit, tracer=tracer,
                                            flight=flight))
+    sink = None
+    if metrics_log and metrics_interval_s > 0:
+        from repro.obs.series import JsonlSink
+        sink = JsonlSink(metrics_log)
     for lp in loops:
         lp.watchdog = watchdog
         lp.flight = flight
+        if metrics_interval_s > 0:
+            from repro.obs.series import MetricsRecorder
+            lp.recorder = MetricsRecorder(
+                lp.engine, index=lp.index, role=lp.role,
+                interval_s=metrics_interval_s, sink=sink,
+                watchdog=watchdog, loop=lp)
     if flight is not None and flight.state_provider is None:
         flight.state_provider = lambda: _flight_state(loops, watchdog)
     if len(loops) == 1:
@@ -796,26 +884,32 @@ def _front(engines, max_pending: int, tracer=None, steal: bool = True,
 
 async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
                 max_pending: int = 64, tracer=None, steal: bool = True,
-                audit=None, watchdog=None, flight=None,
-                roles=None) -> None:
+                audit=None, watchdog=None, flight=None, roles=None,
+                metrics_interval_s: float = 0.5,
+                metrics_log=None) -> None:
     """Run the HTTP front end until cancelled, then drain gracefully.
     ``engine`` may be one ``ContinuousEngine`` or a list (one per
     device/mesh; requests are routed least-loaded and rebalanced by
     work stealing unless ``steal=False``). ``audit``/``watchdog``/
     ``flight`` enable the repro.obs.audit layer; ``roles`` builds
-    disaggregated prefill/decode pools (see ``_front``)."""
+    disaggregated prefill/decode pools (see ``_front``);
+    ``metrics_interval_s``/``metrics_log`` configure the per-engine
+    time-series recorders behind /debug/timeline and /console."""
     if watchdog is not None and flight is not None \
             and watchdog.flight is None:
         watchdog.flight = flight
     frontend = HttpFrontend(
         _front(engine, max_pending, tracer, steal, audit=audit,
-               watchdog=watchdog, flight=flight, roles=roles),
+               watchdog=watchdog, flight=flight, roles=roles,
+               metrics_interval_s=metrics_interval_s,
+               metrics_log=metrics_log),
         host=host, port=port, tracer=tracer, flight=flight,
         watchdog=watchdog)
     await frontend.start()
     log.info("repro.server listening on http://%s:%s (POST "
              "/v1/completions, GET /healthz, GET /metrics, GET "
-             "/debug/vars, GET /debug/flight; engines=%d)",
+             "/debug/vars, GET /debug/flight, GET /debug/timeline, "
+             "GET /console; engines=%d)",
              frontend.host, frontend.port, len(frontend.engines))
     try:
         await frontend.serve_forever()
@@ -827,11 +921,14 @@ async def serve(engine, host: str = "127.0.0.1", port: int = 8000,
 
 def run(engine, host: str = "127.0.0.1", port: int = 8000,
         max_pending: int = 64, tracer=None, steal: bool = True,
-        audit=None, watchdog=None, flight=None, roles=None) -> None:
+        audit=None, watchdog=None, flight=None, roles=None,
+        metrics_interval_s: float = 0.5, metrics_log=None) -> None:
     """Blocking entry point used by ``repro.launch.serve --http``."""
     try:
         asyncio.run(serve(engine, host, port, max_pending, tracer=tracer,
                           steal=steal, audit=audit, watchdog=watchdog,
-                          flight=flight, roles=roles))
+                          flight=flight, roles=roles,
+                          metrics_interval_s=metrics_interval_s,
+                          metrics_log=metrics_log))
     except KeyboardInterrupt:
         pass

@@ -126,6 +126,9 @@ class EngineLoop:
         # dump sink for SLO breaches and decode-thread crashes
         self.watchdog = None
         self.flight = None
+        # time-series recorder (repro.obs.series; set by the front end).
+        # Sampled on the decode thread each iteration, closed at drain.
+        self.recorder = None
         self._steal_inflight = False        # one outstanding steal ask
         self._next_steal_t = 0.0            # backoff after an empty grant
         self._thread = threading.Thread(target=self._run, daemon=True,
@@ -166,6 +169,8 @@ class EngineLoop:
         }
         if eng.auditor is not None:
             out["audit"] = eng.auditor.stats()
+        if self.recorder is not None:
+            out["recorder"] = self.recorder.last_rates()
         return out
 
     def start(self) -> "EngineLoop":
@@ -242,6 +247,27 @@ class EngineLoop:
     # ------------------------------------------------- decode thread
 
     def _run(self) -> None:
+        # however the loop exits (drain, no-drain, or a crash that
+        # escaped the per-step guard), the observability capture must
+        # close: the recorder flushes its final sample and detaches
+        # from the --metrics-log sink, and an active profiler capture
+        # is stopped — a drained fleet leaks neither
+        try:
+            self._run_loop()
+        finally:
+            self._shutdown_obs()
+
+    def _shutdown_obs(self) -> None:
+        if self.recorder is not None:
+            self.recorder.close()
+        profiler = getattr(self.engine, "profiler", None)
+        if profiler is not None:
+            try:
+                profiler.close()
+            except Exception:
+                log.exception("profiler close failed at drain")
+
+    def _run_loop(self) -> None:
         eng = self.engine
         if self.tracer is not None:
             self.tracer.name_thread("decode", pid=eng.obs_pid)
@@ -292,6 +318,10 @@ class EngineLoop:
             eng.audit_tick()
             eng.metrics.queue_depth = (len(self._pending)
                                        + len(eng.scheduler.waiting))
+            if self.recorder is not None:
+                # cheap per-iteration cadence check; a real sample at
+                # most once per interval (repro.obs.series)
+                self.recorder.maybe_sample()
             if self._stop.is_set() and not self._drain_on_stop \
                     and not self._live and eng.scheduler.idle:
                 return

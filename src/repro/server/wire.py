@@ -19,6 +19,7 @@ import asyncio
 import dataclasses
 import json
 from typing import Dict, Optional, Union
+from urllib.parse import unquote
 
 from repro.server.types import BadRequest
 
@@ -40,6 +41,17 @@ class HttpRequest:
     headers: Dict[str, str]            # keys lower-cased
     body: bytes
     version: str = "HTTP/1.1"
+    query: str = ""                    # raw query string, no leading '?'
+
+    def params(self) -> Dict[str, str]:
+        """Query parameters (last value wins; bare keys map to '')."""
+        out: Dict[str, str] = {}
+        for part in self.query.split("&"):
+            if not part:
+                continue
+            key, _, val = part.partition("=")
+            out[unquote(key)] = unquote(val)
+        return out
 
     @property
     def keep_alive(self) -> bool:
@@ -94,8 +106,8 @@ async def read_request(reader: asyncio.StreamReader) \
                 return None
     elif headers.get("transfer-encoding"):
         raise BadRequest("chunked request bodies are not supported")
-    return HttpRequest(method, path.split("?", 1)[0], headers, body,
-                       version)
+    path, _, query = path.partition("?")
+    return HttpRequest(method, path, headers, body, version, query=query)
 
 
 def response(status: int, body: Union[bytes, dict, str] = b"",

@@ -391,6 +391,11 @@ class ContinuousEngine:
                                   cancelled=comp.cancelled)
         self.stats["requests"] += 1
         self.stats["tokens"] += comp.n_tokens
+        if not comp.cancelled:
+            # goodput: tokens from completions a client actually kept
+            # (the repro.obs.series rate decomposition tok_s vs
+            # goodput_tok_s reads these two counters)
+            self.stats["good_tokens"] += comp.n_tokens
         if self.auditor is not None:
             self.auditor.on_completion(comp)
 
